@@ -1,0 +1,42 @@
+"""Paper Fig. 10: fraction of colocations where approximation ALONE meets QoS
+vs needing 1 / 2 / 3+ reclaimed chip-groups, across 1-/2-/3-app mixes."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows, job_for
+from repro.configs import ARCHS
+from repro.core.colocation import SERVICES, simulate
+
+
+def main(rows: Rows):
+    archs = list(ARCHS)
+    rng = np.random.default_rng(7)
+    mixes = [(a,) for a in archs] + \
+        [tuple(rng.choice(archs, 2, replace=False)) for _ in range(5)] + \
+        [tuple(rng.choice(archs, 3, replace=False)) for _ in range(5)]
+    out = {}
+    for svc_name, svc in SERVICES.items():
+        buckets = {"approx_only": 0, "1_group": 0, "2_groups": 0,
+                   "3+_groups": 0}
+        for mix in mixes:
+            jobs = [job_for(a, total_work=300.0) for a in mix]
+            res = simulate(svc, jobs, horizon_s=300, seed=hash(mix) % 2**31)
+            worst = max(res.max_reclaimed)
+            if worst == 0:
+                buckets["approx_only"] += 1
+            elif worst == 1:
+                buckets["1_group"] += 1
+            elif worst == 2:
+                buckets["2_groups"] += 1
+            else:
+                buckets["3+_groups"] += 1
+        total = sum(buckets.values())
+        out[svc_name] = {k: v / total for k, v in buckets.items()}
+        rows.add(f"fig10.{svc_name}", out[svc_name]["approx_only"] * 100,
+                 ";".join(f"{k}={v:.2f}" for k, v in out[svc_name].items()))
+    (RESULTS_DIR / "breakdown_fig10.json").write_text(
+        json.dumps(out, indent=1))
+    return rows

@@ -1,0 +1,57 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / \
+    "dryrun"
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / \
+    "bench"
+RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+
+def load_artifact(arch: str, shape: str = "train_4k", mesh: str = "pod",
+                  variant: str = "precise"):
+    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh}__{variant}.json"
+    if p.exists():
+        return json.loads(p.read_text())
+    return None
+
+
+def job_for(arch: str, shape_name: str = "train_4k", total_work: float = 300.0,
+            serving: bool = False):
+    """BatchJob with a variant table anchored on the dry-run artifact."""
+    from repro.configs import SHAPES, get_config
+    from repro.core.colocation import BatchJob
+    from repro.core.explorer import explore
+    cfg = get_config(arch)
+    art = load_artifact(arch, shape_name)
+    table = explore(cfg, SHAPES[shape_name], serving=serving,
+                    baseline_art=art)
+    import numpy as _np
+    rng = _np.random.default_rng(abs(hash(arch)) % 2**31)
+    return BatchJob(name=arch, table=table, total_work=total_work,
+                    phase_offset=float(rng.uniform(0, 2 * _np.pi)),
+                    phase_period=float(rng.uniform(50, 120)))
+
+
+class Rows:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.2f},{derived}")
+
+
+def timed(fn, *args, n=3, **kw):
+    fn(*args, **kw)                     # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / n, out

@@ -1,0 +1,38 @@
+"""Paper Fig. 4: Pliant's dynamic behavior — p99 / active variant / reclaimed
+chips over time for selected (service x batch-job) colocations. Timelines go
+to results/bench/dynamic_<svc>_<arch>.json."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows, job_for
+from repro.core.colocation import SERVICES, simulate
+
+PAIRS = [("token-serve", "phi4-mini-3.8b"),
+         ("token-serve", "mamba2-780m"),
+         ("search-prefill", "olmoe-1b-7b"),
+         ("search-prefill", "gemma2-27b"),
+         ("embed-api", "zamba2-2.7b"),
+         ("embed-api", "whisper-large-v3")]
+
+
+def main(rows: Rows):
+    for svc_name, arch in PAIRS:
+        svc = SERVICES[svc_name]
+        job = job_for(arch, total_work=240.0)
+        res = simulate(svc, [job], horizon_s=400, seed=21)
+        tl = [{"t": p.t, "p99": p.p99, "variant": p.variants[0],
+               "reclaimed": p.reclaimed[0], "action": p.action}
+              for p in res.timeline]
+        (RESULTS_DIR / f"dynamic_{svc_name}_{arch}.json").write_text(
+            json.dumps({"qos": svc.qos_target_s, "timeline": tl}, indent=0))
+        n_switch = sum(1 for p in res.timeline if "variant" not in p.action
+                       and p.action != "hold")
+        rows.add(f"fig4.{svc_name}.{arch}",
+                 res.exec_time() * 1e6 / max(len(res.timeline), 1),
+                 f"met={res.qos_met_frac:.2f};max_reclaim="
+                 f"{res.max_reclaimed[0]};actions={n_switch};"
+                 f"loss={job.quality_loss:.3f}")
+    return rows

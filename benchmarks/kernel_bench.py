@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: µs/call (CPU; Pallas interpret vs jnp reference)
+and max abs error vs oracle. On TPU the same harness times the native path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, timed
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def main(rows: Rows):
+    # int8 matmul
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    xq, xs = ref.quantize_rowwise(x)
+    wq, ws = ref.quantize_rowwise(w, axis=0)
+    t_ref, out_ref = timed(lambda: jax.block_until_ready(
+        ref.int8_matmul_ref(xq, xs, wq, ws, jnp.float32)))
+    t_k, out_k = timed(lambda: jax.block_until_ready(
+        int8_matmul(xq, xs, wq, ws, out_dtype=jnp.float32, interpret=True,
+                    bk=256)))
+    err = float(jnp.max(jnp.abs(out_k - out_ref)))
+    rows.add("kernel.int8_matmul.ref", t_ref * 1e6, "jnp oracle")
+    rows.add("kernel.int8_matmul.pallas", t_k * 1e6,
+             f"interpret;max_err={err:.2e}")
+
+    # flash attention
+    B, H, KVH, S, hd = 1, 4, 2, 512, 64
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(3), (B, KVH, S, hd)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(4), (B, KVH, S, hd))
+    t_ref, o_ref = timed(lambda: jax.block_until_ready(
+        ref.mha_ref(q, k, v, causal=True)))
+    t_k, o_k = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True)))
+    err = float(jnp.max(jnp.abs(o_k - o_ref)))
+    rows.add("kernel.flash_attention.ref", t_ref * 1e6, "jnp oracle")
+    rows.add("kernel.flash_attention.pallas", t_k * 1e6,
+             f"interpret;max_err={err:.2e}")
+    t_p, _ = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True, kv_keep_stride=4)))
+    rows.add("kernel.flash_attention.perforated", t_p * 1e6,
+             "kv_keep_stride=4 (the attention-perforation knob)")
+
+    # ssd scan
+    B, S, Hh, P, N = 1, 256, 4, 64, 32
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, Hh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6), (B, S, Hh)))
+    a = -jnp.exp(jax.random.uniform(jax.random.PRNGKey(7), (Hh,)))
+    bb = jax.random.normal(jax.random.PRNGKey(8), (B, S, N)) * 0.5
+    cc = jax.random.normal(jax.random.PRNGKey(9), (B, S, N)) * 0.5
+    t_naive, o_naive = timed(lambda: jax.block_until_ready(
+        ref.ssd_ref(x, dt, a, bb, cc)))
+    t_chunk, o_chunk = timed(lambda: jax.block_until_ready(
+        ref.ssd_chunked_ref(x, dt, a, bb, cc, chunk=64)))
+    t_k, o_k = timed(lambda: jax.block_until_ready(
+        ssd_scan(x, dt, a, bb, cc, chunk=64, interpret=True)))
+    rows.add("kernel.ssd.naive_recurrence", t_naive * 1e6, "oracle")
+    rows.add("kernel.ssd.chunked_jnp", t_chunk * 1e6,
+             f"max_err={float(jnp.max(jnp.abs(o_chunk - o_naive))):.2e}")
+    rows.add("kernel.ssd.pallas", t_k * 1e6,
+             f"interpret;max_err={float(jnp.max(jnp.abs(o_k - o_naive))):.2e}")
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 8: sensitivity to input load (40%..100% of saturation)."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows, job_for
+from repro.core.colocation import SERVICES, simulate
+
+LOADS = [0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+
+
+def main(rows: Rows):
+    out = {}
+    for svc_name, svc in SERVICES.items():
+        arch = "phi4-mini-3.8b"
+        for load in LOADS:
+            job = job_for(arch, total_work=240.0)
+            res = simulate(svc, [job], horizon_s=360, load_frac=load,
+                           seed=31)
+            tail = float(np.percentile([p.p99 for p in res.timeline[5:]],
+                                       90))
+            precise_frac = float(np.mean(
+                [p.variants[0] == 0 for p in res.timeline]))
+            out[f"{svc_name}|{load:.1f}"] = {
+                "p99_norm": tail / svc.qos_target_s,
+                "met": res.qos_met_frac,
+                "exec_ratio": res.exec_time() / job.total_work,
+                "precise_frac": precise_frac,
+                "inaccuracy": job.quality_loss,
+            }
+        met_by_load = {l: out[f"{svc_name}|{l:.1f}"]["met"] for l in LOADS}
+        low_ok = met_by_load[0.4] > 0.9 and met_by_load[0.5] > 0.9
+        rows.add(f"fig8.{svc_name}", out[f"{svc_name}|0.8"]["p99_norm"] * 100,
+                 f"met@0.4={met_by_load[0.4]:.2f};met@0.8="
+                 f"{met_by_load[0.8]:.2f};met@1.0={met_by_load[1.0]:.2f};"
+                 f"low_load_ok={low_ok}")
+    (RESULTS_DIR / "load_fig8.json").write_text(json.dumps(out, indent=1))
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Fig. 6 + 7: multi-application colocations. Sampled 2- and 3-way
+mixes of the 10 archs per service; violin stats (min/mean/max) of normalized
+tail latency, execution time, and inaccuracy; round-robin balance check."""
+from __future__ import annotations
+
+import itertools
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows, job_for
+from repro.configs import ARCHS
+from repro.core.colocation import SERVICES, simulate
+
+
+def main(rows: Rows):
+    archs = list(ARCHS)
+    rng = np.random.default_rng(0)
+    mixes2 = [tuple(rng.choice(archs, 2, replace=False)) for _ in range(6)]
+    mixes3 = [tuple(rng.choice(archs, 3, replace=False)) for _ in range(6)]
+    out = {}
+    for svc_name, svc in SERVICES.items():
+        for n_apps, mixes in [(1, [(a,) for a in archs[:6]]),
+                              (2, mixes2), (3, mixes3)]:
+            p99n, execn, inacc, spreads = [], [], [], []
+            for mix in mixes:
+                jobs = [job_for(a, total_work=500.0) for a in mix]
+                res = simulate(svc, jobs, horizon_s=420,
+                               seed=hash(mix) % 2**31)
+                p99n += [p.p99 / svc.qos_target_s for p in res.timeline[5:]]
+                execn += [res.exec_time(j) / jobs[j].total_work
+                          for j in range(len(jobs))]
+                losses = [j.quality_loss for j in jobs]
+                inacc += losses
+                if len(losses) > 1:
+                    spreads.append(max(losses) - min(losses))
+            key = f"{svc_name}|{n_apps}apps"
+            out[key] = {
+                "p99_norm": [float(np.min(p99n)), float(np.mean(p99n)),
+                             float(np.max(p99n))],
+                "exec_norm": [float(np.min(execn)), float(np.mean(execn)),
+                              float(np.max(execn))],
+                "inaccuracy": [float(np.min(inacc)), float(np.mean(inacc)),
+                               float(np.max(inacc))],
+                "loss_spread_max": float(max(spreads)) if spreads else 0.0,
+            }
+            rows.add(f"fig7.{svc_name}.{n_apps}apps",
+                     out[key]["p99_norm"][1] * 100,
+                     f"inacc_mean={out[key]['inaccuracy'][1]:.4f};"
+                     f"spread={out[key]['loss_spread_max']:.4f}")
+    (RESULTS_DIR / "multiapp_fig7.json").write_text(json.dumps(out, indent=1))
+    return rows

@@ -1,0 +1,86 @@
+"""Paper Fig. 1 (odd rows): MEASURED approximation design-space exploration.
+
+For reduced configs of representative archs, run every candidate variant for
+a short real training run on CPU, recording (step time, quality loss vs
+precise); then Pareto-prune exactly as the explorer does. Writes the scatter
+to results/bench/pareto_<arch>.json and prints the selected frontier.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows
+from repro.approx.knobs import ApproxKnobs, PRECISE
+from repro.configs import get_config
+from repro.core.explorer import pareto_front
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import api
+from repro.train import optim, step as step_mod
+
+ARCHS = ["phi4-mini-3.8b", "olmoe-1b-7b", "mamba2-780m"]
+STEPS = 30
+B, S = 8, 64
+
+
+def measure_variant(cfg, knobs, data, key=0):
+    params = api.init(cfg, jax.random.PRNGKey(key), jnp.float32)
+    opt = optim.init_opt(params)
+    step = jax.jit(step_mod.make_train_step(
+        cfg, knobs, opt_cfg=optim.OptConfig(lr=3e-3, warmup=5,
+                                            total_steps=STEPS),
+        remat="none"))
+    batch0 = {"tokens": jnp.asarray(data.batch(0))}
+    step(params, opt, batch0)           # compile
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(STEPS):
+        batch = {"tokens": jnp.asarray(data.batch(i))}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    wall = time.perf_counter() - t0
+    return wall / STEPS, float(np.mean(losses[-8:]))
+
+
+def grid_for(cfg):
+    cands = [PRECISE,
+             ApproxKnobs(matmul_precision="int8"),
+             ApproxKnobs(token_drop=0.25),
+             ApproxKnobs(token_drop=0.5),
+             ApproxKnobs(layer_skip=0.5),
+             ApproxKnobs(matmul_precision="int8", token_drop=0.25)]
+    if any(k in ("attn", "local") for k in cfg.kinds()):
+        cands.append(ApproxKnobs(kv_keep_stride=4))
+    if cfg.moe is not None:
+        cands += [ApproxKnobs(topk_override=1),
+                  ApproxKnobs(topk_override=1, matmul_precision="int8")]
+    return cands
+
+
+def main(rows: Rows):
+    for arch in ARCHS:
+        cfg = get_config(arch + "-smoke")
+        data = SyntheticLM(DataConfig(cfg.vocab_size, S, B, seed=0))
+        t_precise, loss_precise = measure_variant(cfg, PRECISE, data)
+        points = []
+        for knobs in grid_for(cfg):
+            t, loss = measure_variant(cfg, knobs, data)
+            inacc = max(0.0, (loss - loss_precise) / loss_precise)
+            points.append({"knobs": knobs.describe(),
+                           "rel_time": t / t_precise,
+                           "inaccuracy": inacc})
+        front = pareto_front([(p["inaccuracy"], p["rel_time"])
+                              for p in points])
+        sel = [points[i]["knobs"] for i in front
+               if points[i]["inaccuracy"] <= 0.05]
+        out = {"arch": arch, "points": points, "selected": sel,
+               "precise_s_per_step": t_precise}
+        (RESULTS_DIR / f"pareto_{arch}.json").write_text(json.dumps(out,
+                                                                    indent=1))
+        rows.add(f"fig1.pareto.{arch}", t_precise * 1e6,
+                 f"variants={len(points)};frontier={len(sel)}")
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 1 (even rows): impact of each selected approximate variant on
+each interactive service's tail latency (static, per-variant — no control)."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows, job_for
+from repro.core.colocation import SERVICES, interference_of
+
+
+def main(rows: Rows):
+    out = {}
+    for arch in ["phi4-mini-3.8b", "olmoe-1b-7b", "mamba2-780m",
+                 "gemma2-27b"]:
+        job = job_for(arch)
+        for svc_name, svc in SERVICES.items():
+            mults = []
+            for vi in range(len(job.table)):
+                job.variant = vi
+                interf = interference_of([job], svc)
+                p99 = svc.p99(0.775, interf, 0)
+                mults.append(p99 / svc.qos_target_s)
+            out[f"{arch}|{svc_name}"] = {
+                "variants": [v.name for v in job.table.variants],
+                "p99_norm": mults,
+            }
+            # precise worst; approximation monotonically helps
+            rows.add(f"fig1b.{arch}.{svc_name}", mults[0] * 100,
+                     f"precise={mults[0]:.2f};most_approx={mults[-1]:.2f};"
+                     f"monotone={all(mults[i] >= mults[i+1] - 1e-9 for i in range(len(mults)-1))}")
+    (RESULTS_DIR / "qos_impact_fig1b.json").write_text(
+        json.dumps(out, indent=1))
+    return rows

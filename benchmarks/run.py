@@ -1,0 +1,33 @@
+"""Benchmark driver — one module per paper table/figure plus kernels and the
+roofline table. Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (aggregate, breakdown, common, dynamic,
+                            interval_sweep, kernel_bench, load_sweep,
+                            multiapp, pareto, qos_impact, roofline_table)
+    rows = common.Rows()
+    t0 = time.time()
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    mods = [("kernels", kernel_bench), ("fig1", pareto),
+            ("fig1b", qos_impact), ("fig4", dynamic), ("fig5", aggregate),
+            ("fig7", multiapp), ("fig8", load_sweep),
+            ("fig9", interval_sweep), ("fig10", breakdown),
+            ("roofline", roofline_table)]
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        t = time.time()
+        mod.main(rows)
+        print(f"# {name} done in {time.time()-t:.1f}s", file=sys.stderr)
+    print("name,us_per_call,derived")
+    rows.emit()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

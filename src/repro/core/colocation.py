@@ -1,0 +1,224 @@
+"""Colocation contention model + decision-interval simulator.
+
+This container cannot physically produce cross-tenant interference on a TPU
+pod, so the *latency signal source* is a calibrated queueing model; monitor,
+controller, arbiter and actuator are the real runtime code paths (DESIGN.md
+§2). The batch job's resource *pressures* (fraction of step time saturating
+HBM / ICI / MXU) come from the compiled dry-run's roofline terms per variant.
+
+Model:
+    rho      = offered_load / capacity_boost(reclaimed chips)
+    interf   = sum_j chip_share_j * (s_mem * hbm_j + s_ici * ici_j)
+    p99      = p99_iso(rho) * (1 + interf / (1 - rho))
+    p99_iso  = service_time * (1 + c_q / (1 - rho))
+
+Three interactive-service profiles mirror the paper's (strict / moderate /
+lenient): per-token LLM decode ("memcached-like"), interactive search prefill
+("NGINX-like"), and a batch-embedding API ("MongoDB-like").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.controller import (Action, ControllerConfig, PliantController,
+                                   RoundRobinArbiter)
+from repro.core.monitor import LatencyMonitor
+from repro.core.variants import ResourcePressure, Variant, VariantTable
+
+
+@dataclass(frozen=True)
+class ServiceProfile:
+    name: str
+    qos_target_s: float
+    service_time_s: float        # base per-request service time
+    c_q: float                   # queueing-curve constant
+    sens_mem: float              # sensitivity to HBM-bandwidth pressure
+    sens_ici: float              # sensitivity to ICI pressure
+    qps_at_saturation: float
+    chips_boost: float = 0.045   # capacity gain per reclaimed chip-group
+
+    def p99_iso(self, rho: float) -> float:
+        rho = min(rho, 0.995)
+        return self.service_time_s * (1.0 + self.c_q / (1.0 - rho))
+
+    def p99(self, load_frac: float, interference: float,
+            reclaimed_groups: int) -> float:
+        boost = 1.0 + self.chips_boost * reclaimed_groups
+        rho = min(load_frac / boost, 0.995)
+        return self.p99_iso(rho) * (1.0 + interference / (1.0 - rho))
+
+
+# Calibrated so precise-mode colocation violates QoS by the paper's bands
+# (memcached 1.46-3.8x, NGINX 2.1-9.8x, MongoDB 2.08-5.91x) at 75-80% load —
+# asserted in tests/test_colocation.py.
+SERVICES = {
+    # strict per-token decode SLA; decode is HBM-bound -> high mem sensitivity
+    "token-serve": ServiceProfile(
+        "token-serve", qos_target_s=0.020, service_time_s=0.0028, c_q=0.9,
+        sens_mem=0.60, sens_ici=0.25, qps_at_saturation=48_000.0),
+    # interactive search/prefill: balanced compute+collective sensitivity
+    "search-prefill": ServiceProfile(
+        "search-prefill", qos_target_s=0.250, service_time_s=0.036, c_q=0.9,
+        sens_mem=0.42, sens_ici=0.50, qps_at_saturation=3_200.0),
+    # offline-ish embedding API: large latency budget, mild sensitivity
+    "embed-api": ServiceProfile(
+        "embed-api", qos_target_s=1.500, service_time_s=0.30, c_q=0.55,
+        sens_mem=0.30, sens_ici=0.12, qps_at_saturation=310.0),
+}
+
+# paper analogue mapping (DESIGN.md §2)
+PAPER_ANALOGUE = {"token-serve": "memcached", "search-prefill": "NGINX",
+                  "embed-api": "MongoDB"}
+
+
+@dataclass
+class BatchJob:
+    name: str
+    table: VariantTable
+    total_work: float = 300.0        # nominal seconds of precise execution
+    variant: int = 0
+    chip_groups: int = 16            # one data-axis slice per group (16x16 pod)
+    reclaimed: int = 0
+    work_done: float = 0.0
+    weighted_loss: float = 0.0       # integral of qloss over work
+    finished_at: Optional[float] = None
+    # execution phases (paper: e.g. canneal only contends in some phases) —
+    # pressure swings between (1 - phase_amp) and 1 with period phase_period
+    phase_amp: float = 0.75
+    phase_period: float = 80.0
+    phase_offset: float = 0.0
+
+    def pressure(self, t: float = 0.0) -> ResourcePressure:
+        v = self.table.variants[self.variant]
+        m = 1.0 - self.phase_amp * (0.5 + 0.5 * float(
+            np.sin(2 * np.pi * (t / self.phase_period) + self.phase_offset)))
+        return v.pressure.scaled(m)
+
+    def chip_frac(self) -> float:
+        return max(self.chip_groups - self.reclaimed, 0) / self.chip_groups
+
+    def advance(self, dt: float, now: float) -> None:
+        if self.finished_at is not None:
+            return
+        v = self.table.variants[self.variant]
+        speed = self.chip_frac() / max(v.rel_time, 1e-6)
+        dw = dt * speed
+        self.work_done += dw
+        self.weighted_loss += dw * v.quality_loss
+        if self.work_done >= self.total_work:
+            self.finished_at = now
+
+    @property
+    def quality_loss(self) -> float:
+        return self.weighted_loss / max(self.work_done, 1e-9)
+
+
+@dataclass
+class TimelinePoint:
+    t: float
+    p99: float
+    variants: Tuple[int, ...]
+    reclaimed: Tuple[int, ...]
+    action: str
+
+
+@dataclass
+class SimResult:
+    timeline: List[TimelinePoint]
+    service: ServiceProfile
+    jobs: List[BatchJob]
+
+    @property
+    def qos_met_frac(self) -> float:
+        return float(np.mean([p.p99 <= self.service.qos_target_s
+                              for p in self.timeline]))
+
+    def exec_time(self, j: int = 0) -> float:
+        job = self.jobs[j]
+        return job.finished_at if job.finished_at is not None \
+            else self.timeline[-1].t
+
+    @property
+    def max_reclaimed(self) -> Tuple[int, ...]:
+        return tuple(int(np.max([p.reclaimed[i] for p in self.timeline]))
+                     for i in range(len(self.jobs)))
+
+
+def interference_of(jobs: Sequence[BatchJob], svc: ServiceProfile,
+                    t: float = 0.0) -> float:
+    total = 0.0
+    n = max(len(jobs), 1)
+    for job in jobs:
+        if job.finished_at is not None:
+            continue
+        p = job.pressure(t)
+        total += (job.chip_frac() / n) * (svc.sens_mem * p.hbm
+                                          + svc.sens_ici * p.ici)
+    return total
+
+
+def simulate(service: ServiceProfile, jobs: List[BatchJob], *,
+             load_frac: float = 0.775, horizon_s: float = 420.0,
+             interval_s: float = 1.0, precise_only: bool = False,
+             seed: int = 0, slack_threshold: float = 0.10,
+             samples_per_interval: int = 2000) -> SimResult:
+    """Decision-interval simulation of one colocation."""
+    rng = np.random.default_rng(seed)
+    monitor = LatencyMonitor(service.qos_target_s,
+                             window=2 * samples_per_interval)
+    cfg = ControllerConfig(slack_threshold=slack_threshold,
+                           decision_interval_s=interval_s,
+                           max_reclaim=jobs[0].chip_groups - 1)
+    multi = len(jobs) > 1
+    if multi:
+        ctl = RoundRobinArbiter([len(j.table) for j in jobs], cfg,
+                                start=int(rng.integers(len(jobs))))
+    else:
+        ctl = PliantController(len(jobs[0].table), cfg)
+
+    timeline: List[TimelinePoint] = []
+    t = 0.0
+    sigma = 0.35
+    while t < horizon_s and any(j.finished_at is None for j in jobs):
+        interf = interference_of(jobs, service, t)
+        reclaimed_total = sum(j.reclaimed for j in jobs)
+        p99_true = service.p99(load_frac, interf, reclaimed_total)
+        # generate request latencies whose p99 matches the model
+        med = p99_true / float(np.exp(2.326 * sigma))
+        lat = med * np.exp(sigma * rng.standard_normal(samples_per_interval))
+        monitor.record_many(lat)
+        # control acts on the (sampled, noisy) monitor estimate — realistic;
+        # the timeline records the REALIZED p99 the interval's requests saw.
+        p99_real = float(np.percentile(lat, 99))
+        p99_obs = monitor.p99() or p99_real
+        violated = p99_obs > service.qos_target_s
+        slack = (service.qos_target_s - p99_obs) / service.qos_target_s
+
+        action = "hold"
+        if not precise_only:
+            if multi:
+                act, idx = ctl.tick(violated, slack)
+                if idx is not None:
+                    jobs[idx].variant = ctl.states[idx].variant
+                    jobs[idx].reclaimed = ctl.states[idx].reclaimed
+                action = f"{act.value}:{idx}" if idx is not None else act.value
+            else:
+                act = ctl.tick(violated, slack)
+                jobs[0].variant = ctl.state.variant
+                jobs[0].reclaimed = ctl.state.reclaimed
+                action = act.value
+            monitor.reset_window()   # act on fresh data next interval
+
+        for j in jobs:
+            j.advance(interval_s, t + interval_s)
+        timeline.append(TimelinePoint(
+            t=t, p99=p99_real,
+            variants=tuple(j.variant for j in jobs),
+            reclaimed=tuple(j.reclaimed for j in jobs),
+            action=action))
+        t += interval_s
+    return SimResult(timeline, service, jobs)

@@ -1,0 +1,125 @@
+"""Pliant runtime algorithm — faithful implementation of paper Fig. 3.
+
+State per colocation: the active variant index (0 = precise) and the number
+of reclaimed chip-groups. Per decision interval:
+
+* QoS violated, not at most-approximate  -> jump to MOST approximate variant
+* QoS violated, already most-approximate -> reclaim one chip-group
+* QoS met, slack > threshold, chips reclaimed -> return one chip-group
+* QoS met, slack > threshold, no chips out    -> step one variant toward precise
+* QoS met, low slack                          -> hold
+
+The "jump to most approximate on violation, step back gradually" asymmetry is
+the paper's anti-ping-pong hysteresis; the slack threshold (default 10%)
+controls agility (§4.3, Fig. 9 sensitivity).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+class Action(enum.Enum):
+    HOLD = "hold"
+    SET_MOST_APPROX = "set_most_approx"
+    STEP_PRECISE = "step_toward_precise"
+    RECLAIM_CHIPS = "reclaim_chips"
+    RETURN_CHIPS = "return_chips"
+
+
+@dataclass
+class ControllerConfig:
+    slack_threshold: float = 0.10
+    decision_interval_s: float = 1.0
+    max_reclaim: int = 8            # chip-groups reclaimable from a batch job
+
+
+@dataclass
+class AppState:
+    n_variants: int
+    variant: int = 0                # 0 = precise
+    reclaimed: int = 0
+
+    @property
+    def most_approx(self) -> int:
+        return self.n_variants - 1
+
+
+@dataclass
+class PliantController:
+    """Single interactive service x single approximate application."""
+    n_variants: int
+    cfg: ControllerConfig = field(default_factory=ControllerConfig)
+    state: AppState = field(init=False)
+
+    def __post_init__(self):
+        self.state = AppState(self.n_variants)
+
+    def tick(self, qos_violated: bool, slack: float) -> Action:
+        s = self.state
+        if qos_violated:
+            if s.variant < s.most_approx:
+                # immediately jump to most approximate (Fig. 3)
+                s.variant = s.most_approx
+                return Action.SET_MOST_APPROX
+            if s.reclaimed < self.cfg.max_reclaim:
+                s.reclaimed += 1
+                return Action.RECLAIM_CHIPS
+            return Action.HOLD
+        if slack > self.cfg.slack_threshold:
+            if s.reclaimed > 0:
+                s.reclaimed -= 1            # return chips before de-approximating
+                return Action.RETURN_CHIPS
+            if s.variant > 0:
+                s.variant -= 1              # one step toward precise
+                return Action.STEP_PRECISE
+        return Action.HOLD
+
+
+@dataclass
+class RoundRobinArbiter:
+    """Multi-application colocation (paper §4.4): approximate one app at a
+    time round-robin; only when ALL run most-approximate, reclaim chips one
+    app and one chip-group at a time — no app penalized disproportionately."""
+    n_variants_per_app: List[int]
+    cfg: ControllerConfig = field(default_factory=ControllerConfig)
+    start: int = 0                  # paper: first victim selected randomly
+    states: List[AppState] = field(init=False)
+    _cursor: int = field(init=False)
+
+    def __post_init__(self):
+        self.states = [AppState(n) for n in self.n_variants_per_app]
+        self._cursor = self.start % len(self.states)
+
+    def _next(self, pred) -> Optional[int]:
+        n = len(self.states)
+        for d in range(n):
+            i = (self._cursor + d) % n
+            if pred(self.states[i]):
+                self._cursor = (i + 1) % n
+                return i
+        return None
+
+    def tick(self, qos_violated: bool, slack: float
+             ) -> Tuple[Action, Optional[int]]:
+        if qos_violated:
+            i = self._next(lambda s: s.variant < s.most_approx)
+            if i is not None:
+                self.states[i].variant = self.states[i].most_approx
+                return Action.SET_MOST_APPROX, i
+            i = self._next(lambda s: s.reclaimed < self.cfg.max_reclaim)
+            if i is not None:
+                self.states[i].reclaimed += 1
+                return Action.RECLAIM_CHIPS, i
+            return Action.HOLD, None
+        if slack > self.cfg.slack_threshold:
+            i = self._next(lambda s: s.reclaimed > 0)
+            if i is not None:
+                self.states[i].reclaimed -= 1
+                return Action.RETURN_CHIPS, i
+            i = self._next(lambda s: s.variant > 0)
+            if i is not None:
+                self.states[i].variant -= 1
+                return Action.STEP_PRECISE, i
+        return Action.HOLD, None

@@ -1,0 +1,89 @@
+"""Lightweight QoS performance monitor (paper §4.1).
+
+Client-side end-to-end latency sampler with an *adaptive sampling rate*: when
+observed tail latency approaches the QoS target, the sample rate rises toward
+1.0; far from the boundary it decays, keeping overhead negligible — mirroring
+the paper's "adaptive sampling of end-to-end latency".
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Optional
+
+import numpy as np
+
+
+@dataclass
+class LatencyMonitor:
+    qos_target_s: float
+    window: int = 4096
+    min_rate: float = 0.05
+    _buf: Deque[float] = field(default_factory=lambda: collections.deque())
+    _rate: float = 1.0
+    _rng: np.random.Generator = field(
+        default_factory=lambda: np.random.default_rng(0))
+    n_seen: int = 0
+    n_recorded: int = 0
+
+    def record(self, latency_s: float) -> None:
+        self.n_seen += 1
+        if self._rng.random() > self._rate:
+            return
+        self.n_recorded += 1
+        self._buf.append(float(latency_s))
+        while len(self._buf) > self.window:
+            self._buf.popleft()
+        if self.n_recorded % 64 == 0:
+            self._adapt()
+
+    def _adapt(self) -> None:
+        p = self.p99()
+        if p is None:
+            return
+        closeness = p / self.qos_target_s          # >= 1: violating
+        if closeness > 0.8:
+            self._rate = 1.0
+        else:
+            self._rate = max(self.min_rate, closeness)
+
+    def record_many(self, latencies) -> None:
+        """Vectorized record (thinned by the current sample rate)."""
+        import numpy as _np
+        lat = _np.asarray(latencies, float)
+        self.n_seen += lat.size
+        if self._rate < 1.0:
+            lat = lat[self._rng.random(lat.size) <= self._rate]
+        self.n_recorded += lat.size
+        self._buf.extend(lat.tolist())
+        while len(self._buf) > self.window:
+            self._buf.popleft()
+        self._adapt()
+
+    def p99(self) -> Optional[float]:
+        if len(self._buf) < 20:
+            return None
+        return float(np.percentile(np.asarray(self._buf), 99))
+
+    def mean(self) -> Optional[float]:
+        if not self._buf:
+            return None
+        return float(np.mean(np.asarray(self._buf)))
+
+    def qos_violated(self) -> bool:
+        p = self.p99()
+        return p is not None and p > self.qos_target_s
+
+    def slack(self) -> float:
+        """(target - p99) / target; negative when violating."""
+        p = self.p99()
+        if p is None:
+            return 0.0
+        return (self.qos_target_s - p) / self.qos_target_s
+
+    def reset_window(self) -> None:
+        self._buf.clear()
+
+    @property
+    def sample_rate(self) -> float:
+        return self._rate

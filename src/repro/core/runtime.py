@@ -1,0 +1,64 @@
+"""PliantRuntime: monitor -> controller -> actuator glue for REAL runs.
+
+Used by ``launch/train.py`` and the examples: the batch job executes its
+current variant's compiled step; every decision interval (wall-clock deadline
+— a straggling step cannot delay control decisions, the controller simply
+acts at the next boundary) the controller reads the monitor and the actuator
+switches the executable and/or triggers elastic chip reclamation via the
+provided ``reshard_fn``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from repro.core.controller import (Action, ControllerConfig, PliantController)
+from repro.core.monitor import LatencyMonitor
+from repro.core.variants import VariantTable
+
+
+@dataclass
+class PliantRuntime:
+    table: VariantTable
+    monitor: LatencyMonitor
+    cfg: ControllerConfig = field(default_factory=ControllerConfig)
+    reshard_fn: Optional[Callable[[int], None]] = None   # reclaimed groups
+    controller: PliantController = field(init=False)
+    _last_decision: float = field(init=False)
+    history: List[dict] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.controller = PliantController(len(self.table), self.cfg)
+        self._last_decision = time.monotonic()
+
+    @property
+    def active_variant(self) -> int:
+        return self.controller.state.variant
+
+    @property
+    def reclaimed(self) -> int:
+        return self.controller.state.reclaimed
+
+    def step_executable(self) -> Any:
+        return self.table.executable(self.active_variant)
+
+    def maybe_decide(self, now: Optional[float] = None) -> Optional[Action]:
+        """Deadline-based decision tick; call once per batch step boundary."""
+        now = time.monotonic() if now is None else now
+        if now - self._last_decision < self.cfg.decision_interval_s:
+            return None
+        self._last_decision = now
+        violated = self.monitor.qos_violated()
+        slack = self.monitor.slack()
+        before = self.reclaimed
+        action = self.controller.tick(violated, slack)
+        if action in (Action.RECLAIM_CHIPS, Action.RETURN_CHIPS) \
+                and self.reshard_fn is not None:
+            self.reshard_fn(self.reclaimed)
+        self.history.append({
+            "t": now, "action": action.value, "variant": self.active_variant,
+            "reclaimed": self.reclaimed, "violated": violated,
+            "slack": slack})
+        self.monitor.reset_window()
+        return action

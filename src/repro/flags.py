@@ -1,0 +1,35 @@
+"""Process-wide tracing flags for loop-calibrated cost accounting.
+
+XLA's HLO cost analysis counts a ``while`` body ONCE regardless of trip
+count, so a scanned-layers program under-reports FLOPs/bytes/collective
+traffic by ~n_layers. Full unrolling fixes the numbers but costs 10-30x in
+compile time (unaffordable on this 1-core container).
+
+Instead the dry-run compiles the scanned program (fast), then re-compiles one
+*probe* per structural loop site with that site's ``unroll`` factor set to 2.
+The probe-minus-base delta is exactly one extra copy of that loop's body, so
+
+    true_cost = base + sum_i (trips_i - 1) * (probe_i - base)
+
+with known static trip counts. Nested loops compose (see launch/dryrun.py).
+``tests/test_dryrun.py`` validates the calibration against a fully-unrolled
+compile on a small cell.
+
+Loop sites: "groups" (layer-group scan, fwd/bwd/decode), "enc" (encoder
+stack), "ce" (chunked cross-entropy), "ssd" (SSD chunk-state scan),
+"micro" (gradient-accumulation scan).
+"""
+UNROLL = {"groups": 1, "enc": 1, "ce": 1, "ssd": 1, "micro": 1}
+
+
+def unroll(site: str) -> int:
+    return UNROLL.get(site, 1)
+
+
+def set_unroll(site: str, factor: int) -> None:
+    UNROLL[site] = factor
+
+
+def reset_unroll() -> None:
+    for k in UNROLL:
+        UNROLL[k] = 1

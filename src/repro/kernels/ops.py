@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels with platform dispatch.
+
+On TPU the Pallas kernels run natively; on CPU (this container, and the
+dry-run's 512-way host platform) the pure-jnp references lower instead, so
+``lower().compile()`` works everywhere and kernels are validated via
+``interpret=True`` in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantized_matmul(x, w):
+    """W8A8 dynamic-quantized matmul (the Pliant lower-precision knob)."""
+    if _on_tpu():
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        x_q, x_s = ref.quantize_rowwise(x2)
+        w_q, w_s = ref.quantize_rowwise(w, axis=0)
+        y = int8_matmul(x_q, x_s, w_q, w_s, out_dtype=x.dtype)
+        return y.reshape(lead + (w.shape[-1],))
+    return ref.quantized_matmul_ref(x, w)
+
+
+def bf16_matmul(x, w):
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def matmul(precision: str):
+    """Matmul dispatch by approximation precision: 'bf16' | 'int8'."""
+    if precision == "int8":
+        return quantized_matmul
+    return bf16_matmul
+
+
+def flash(q, k, v, *, causal=True, window=0, cap=0.0, kv_keep_stride=1):
+    """Flash attention: Pallas on TPU, naive jnp oracle elsewhere."""
+    if _on_tpu():
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               cap=cap, kv_keep_stride=kv_keep_stride)
+    return ref.mha_ref(q, k, v, causal=causal, window=window, cap=cap)
+
+
+def ssd(x, dt, a, b, c, *, chunk=128, d_skip=None):
+    """Mamba2 SSD scan: Pallas on TPU, chunked jnp elsewhere."""
+    if _on_tpu():
+        y = ssd_scan(x, dt, a, b, c, chunk=chunk)
+        if d_skip is not None:
+            y = (y.astype(jnp.float32)
+                 + d_skip.astype(jnp.float32)[None, None, :, None]
+                 * x.astype(jnp.float32)).astype(x.dtype)
+        return y
+    return ref.ssd_chunked_ref(x, dt, a, b, c, chunk=chunk, d_skip=d_skip)

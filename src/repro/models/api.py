@@ -1,0 +1,104 @@
+"""Family-dispatching model API used by train/serve/launch layers.
+
+* ``model_specs(cfg)``      — full param spec tree
+* ``abstract(cfg)``         — ShapeDtypeStruct params (dry-run, no allocation)
+* ``init(cfg, key)``        — materialized params
+* ``loss_fn(cfg)``          — (params, batch, knobs, **kw) -> (loss, metrics)
+* ``input_specs(cfg, shape)``— ShapeDtypeStruct batch stand-ins per cell
+* ``decode_fn(cfg)``        — one-token serve step
+* ``abstract_caches(cfg, ...)`` — ShapeDtypeStruct KV/SSM caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.common import abstract_params, init_params, logical_axes
+from repro.approx.knobs import ApproxKnobs, PRECISE
+
+
+def model_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_specs(cfg)
+    return lm_mod.lm_specs(cfg)
+
+
+def abstract(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return abstract_params(model_specs(cfg), dtype)
+
+
+def axes(cfg: ModelConfig):
+    return logical_axes(model_specs(cfg))
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    return init_params(model_specs(cfg), key, dtype)
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return functools.partial(encdec_mod.encdec_loss, cfg=cfg)
+    return functools.partial(lm_mod.lm_loss, cfg=cfg)
+
+
+def decode_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return functools.partial(encdec_mod.encdec_decode_step, cfg=cfg)
+    return functools.partial(lm_mod.decode_step, cfg=cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    emb = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {"tokens": tok((B, S + 1)),
+                    "frames": emb((B, cfg.encoder_seq, cfg.d_model))}
+        if cfg.family == "vlm":
+            P = cfg.n_prefix_tokens
+            return {"tokens": tok((B, S - P + 1)),
+                    "prefix_embeds": emb((B, P, cfg.d_model))}
+        return {"tokens": tok((B, S + 1))}
+    # decode: one new token against a seq_len-deep cache
+    out = {"tokens": tok((B, 1)), "position": tok((B,))}
+    if cfg.family == "encdec":
+        out["enc_out"] = emb((B, cfg.encoder_seq, cfg.d_model))
+    return out
+
+
+def make_inputs(cfg: ModelConfig, shape_or_specs, key=None):
+    """Materialize a synthetic batch matching ``input_specs`` (smoke tests)."""
+    specs = (input_specs(cfg, shape_or_specs)
+             if isinstance(shape_or_specs, ShapeConfig) else shape_or_specs)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32 and name != "position":
+            out[name] = jax.random.randint(sub, s.shape, 0,
+                                           max(cfg.vocab_size, 2), jnp.int32)
+        elif name == "position":
+            out[name] = jnp.zeros(s.shape, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    quantized: bool = False):
+    if cfg.family == "encdec":
+        fn = lambda: encdec_mod.init_caches(cfg, batch, max_len,
+                                            quantized=quantized)
+    else:
+        fn = lambda: lm_mod.init_caches(cfg, batch, max_len,
+                                        quantized=quantized)
+    return jax.eval_shape(fn)

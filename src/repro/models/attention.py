@@ -1,0 +1,220 @@
+"""GQA attention: specs, train/prefill forward (chunked, static-sliced causal),
+banded sliding-window path, cross-attention, and cached decode.
+
+The full-sequence causal path unrolls over query chunks with *static* growing
+KV slices, so compiled HLO FLOPs match true causal cost (no masked-waste) —
+this is the reference path the dry-run compiles. On real TPUs ``ops.flash``
+dispatches to the Pallas kernel instead.
+
+Approximation hook (Pliant "loop perforation" applied to attention): a static
+``kv_keep_stride`` > 1 drops off-diagonal KV chunks with stride, cutting both
+FLOPs and HBM traffic of the attention loop at bounded quality loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, apply_rope, softcap
+
+
+def attn_specs(cfg: ModelConfig):
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": ParamSpec((d, q), ("embed", "q_heads")),
+        "wk": ParamSpec((d, kv), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, kv), ("embed", "kv_heads")),
+        "wo": ParamSpec((q, d), ("q_heads", "embed")),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _sdpa(q, k, v, *, mask=None, cap: float = 0.0):
+    """q: (B,Sq,G,R,hd) k/v: (B,Skv,G,hd). Softmax in fp32."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bsgrh,btgh->bgrst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap) if cap else s
+    s = s.astype(jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrst,btgh->bsgrh", p, v)
+
+
+def _merge(o, B, Sq, q_dim):
+    return o.reshape(B, Sq, q_dim)
+
+
+def default_q_chunk(seq_len: int) -> int:
+    """Bound the per-chunk fp32 score tile (chunk x S) at long sequences:
+    32k sequences with 1024-wide chunks cost 6+ GiB of transient scores per
+    layer (EXPERIMENTS.md §Perf); 256-wide chunks cap it at ~1.6 GiB."""
+    if seq_len <= 8192:
+        return 1024
+    return 256
+
+
+def attention(params, x, positions, cfg: ModelConfig, *,
+              mode: str = "causal",          # causal | window | cross | full
+              kv_x: Optional[jax.Array] = None,
+              q_chunk: int = 0,
+              kv_keep_stride: int = 1,
+              rope: bool = True):
+    """Full-sequence attention. x: (B,S,D). Returns (B,S,D)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    G, R = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(src @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(src @ params["wv"], cfg.n_kv_heads, hd)
+    if rope and mode != "cross":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, G, R, hd)
+
+    q_chunk = q_chunk or default_q_chunk(S)
+    if mode == "window":
+        o = _banded(q, k, v, cfg.window, cap=cfg.attn_softcap)
+    elif mode in ("cross", "full"):
+        o = _sdpa(q, k, v, cap=cfg.attn_softcap)
+    else:
+        o = _causal_chunked(q, k, v, q_chunk=q_chunk,
+                            kv_keep_stride=kv_keep_stride,
+                            cap=cfg.attn_softcap)
+    return _merge(o, B, S, cfg.q_dim) @ params["wo"]
+
+
+def _causal_chunked(q, k, v, *, q_chunk: int, kv_keep_stride: int, cap: float):
+    """Unrolled q-chunk loop; chunk i sees kv[: (i+1)*C] via static slices.
+
+    With ``kv_keep_stride=p``: off-diagonal KV chunks are perforated — chunk i
+    keeps its diagonal + previous chunk, and every p-th older chunk.
+    """
+    B, S, G, R, hd = q.shape
+    C = min(q_chunk, S)
+    assert S % C == 0, (S, C)
+    n = S // C
+    # positions within the full sequence for masking the diagonal chunk
+    outs = []
+    for i in range(n):
+        qi = q[:, i * C:(i + 1) * C]
+        if kv_keep_stride <= 1 or i <= 1:
+            ki, vi = k[:, : (i + 1) * C], v[:, : (i + 1) * C]
+            kv_pos = jnp.arange((i + 1) * C)
+        else:
+            # keep chunks: every `stride`-th old chunk + chunk i-1 + diagonal i
+            keep = [j for j in range(i - 1) if j % kv_keep_stride == 0] + [i - 1, i]
+            ki = jnp.concatenate([k[:, j * C:(j + 1) * C] for j in keep], axis=1)
+            vi = jnp.concatenate([v[:, j * C:(j + 1) * C] for j in keep], axis=1)
+            kv_pos = jnp.concatenate(
+                [jnp.arange(j * C, (j + 1) * C) for j in keep])
+        q_pos = jnp.arange(i * C, (i + 1) * C)
+        mask = kv_pos[None, :] <= q_pos[:, None]           # (C, Skv_i)
+        outs.append(_sdpa(qi, ki, vi,
+                          mask=mask[None, None, None], cap=cap))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _banded(q, k, v, window: int, *, cap: float):
+    """Sliding-window causal attention as block-band: each W-block of queries
+    attends to its own + previous KV block, masked to the exact window."""
+    B, S, G, R, hd = q.shape
+    W = min(window, S)
+    assert S % W == 0, (S, W)
+    n = S // W
+    qb = q.reshape(B, n, W, G, R, hd)
+    kb = k.reshape(B, n, W, G, hd)
+    vb = v.reshape(B, n, W, G, hd)
+    # previous block (block -1 = zeros, fully masked)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)              # (B,n,2W,G,hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    q_pos = jnp.arange(W)[:, None]                         # in-block
+    kv_pos = jnp.arange(2 * W)[None, :] - W                # relative to block
+    mask = (kv_pos <= q_pos) & (kv_pos > q_pos - W)
+    first = jnp.arange(n)[:, None, None] > 0               # block0 has no prev
+    mask = mask[None] & (first | (kv_pos[None] >= 0))
+    scale = hd ** -0.5
+    s = jnp.einsum("bnsgrh,bntgh->bngrst", qb, k2,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap) if cap else s
+    s = jnp.where(mask[None, :, None, None, :, :],
+                  s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bngrst,bntgh->bnsgrh", p, v2)
+    return o.reshape(B, S, G, R, hd)
+
+
+# ------------------------------------------------------------------ decode --
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, W_cache, G, hd)
+    v: jax.Array
+    pos: jax.Array        # (B, W_cache) absolute positions, -1 = empty
+    cursor: jax.Array     # scalar int32: next write slot (ring)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16,
+               quantized: bool = False) -> KVCache:
+    hd = cfg.resolved_head_dim
+    kdt = jnp.int8 if quantized else dtype
+    shape = (batch, length, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, kdt), v=jnp.zeros(shape, kdt),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+        cursor=jnp.zeros((), jnp.int32))
+
+
+def decode_attention(params, x, position, cache: KVCache, cfg: ModelConfig, *,
+                     window: int = 0, kv_scale: float = 0.0, rope: bool = True):
+    """One-token decode. x: (B,1,D); position: (B,) absolute position.
+
+    Returns (out (B,1,D), new_cache). Ring-buffer cache: local layers size W,
+    global layers size max_seq. ``kv_scale``>0 → int8-quantized cache entries.
+    """
+    B, one, D = x.shape
+    hd = cfg.resolved_head_dim
+    G, R = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], G, hd)
+    v = _split_heads(x @ params["wv"], G, hd)
+    if rope:
+        q = apply_rope(q, position[:, None], cfg.rope_theta)
+        k = apply_rope(k, position[:, None], cfg.rope_theta)
+    W = cache.k.shape[1]
+    slot = cache.cursor % W
+    if kv_scale:
+        k_store = jnp.clip(jnp.round(k / kv_scale), -127, 127).astype(jnp.int8)
+        v_store = jnp.clip(jnp.round(v / kv_scale), -127, 127).astype(jnp.int8)
+    else:
+        k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+    # one-hot masked write, NOT dynamic_update_slice: a DUS at a traced index
+    # across the sequence-SHARDED cache dim makes GSPMD all-gather the whole
+    # cache every step (observed 40x decode memory traffic + 0.4s collectives
+    # on mistral decode_32k — EXPERIMENTS.md §Perf); the masked select is
+    # elementwise over the sharded dim and partitions cleanly.
+    wmask = (jnp.arange(W) == slot)
+    nk = jnp.where(wmask[None, :, None, None], k_store, cache.k)
+    nv = jnp.where(wmask[None, :, None, None], v_store, cache.v)
+    npos = jnp.where(wmask[None, :], position[:, None], cache.pos)
+    new_cache = KVCache(nk, nv, npos, cache.cursor + 1)
+
+    kk = nk.astype(q.dtype) * kv_scale if kv_scale else nk.astype(q.dtype)
+    vv = nv.astype(q.dtype) * kv_scale if kv_scale else nv.astype(q.dtype)
+    qg = q.reshape(B, 1, G, R, hd)
+    valid = npos >= 0
+    if window:
+        valid &= npos > (position[:, None] - window)
+    valid &= npos <= position[:, None]
+    o = _sdpa(qg, kk, vv, mask=valid[:, None, None, None, :],
+              cap=cfg.attn_softcap)
+    return _merge(o, B, 1, cfg.q_dim) @ params["wo"], new_cache

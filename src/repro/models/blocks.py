@@ -1,0 +1,100 @@
+"""Per-kind transformer blocks (pre-norm residual) and their param specs."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, MAMBA, SHARED_ATTN, ModelConfig
+from repro.models.common import ParamSpec, rms_norm
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.approx.knobs import ApproxKnobs, PRECISE
+
+
+def block_specs(kind: str, cfg: ModelConfig, *, cross: bool = False):
+    d = cfg.d_model
+    if kind == MAMBA:
+        return {"norm": ParamSpec((d,), ("embed",), init="ones"),
+                "mixer": mamba_mod.mamba_specs(cfg)}
+    # attention-family block
+    s = {"norm_attn": ParamSpec((d,), ("embed",), init="ones"),
+         "attn": attn_mod.attn_specs(cfg),
+         "norm_mlp": ParamSpec((d,), ("embed",), init="ones")}
+    if cross:
+        s["norm_cross"] = ParamSpec((d,), ("embed",), init="ones")
+        s["cross"] = attn_mod.attn_specs(cfg)
+    if cfg.moe is not None and kind in (ATTN, LOCAL_ATTN):
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_mod.mlp_specs(cfg)
+    return s
+
+
+def block_forward(kind: str, params, h, positions, cfg: ModelConfig,
+                  knobs: ApproxKnobs = PRECISE, *,
+                  ep_axis: Optional[str] = None, mesh=None,
+                  enc_out: Optional[jax.Array] = None,
+                  causal: bool = True):
+    """Full-sequence block. Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    prec = knobs.matmul_precision
+    if kind == MAMBA:
+        h = h + mamba_mod.mamba_mixer(params["mixer"],
+                                      rms_norm(h, params["norm"], cfg.norm_eps),
+                                      cfg, precision=prec)
+        return h, aux
+    mode = ("window" if kind == LOCAL_ATTN else
+            ("causal" if causal else "full"))
+    h = h + attn_mod.attention(
+        params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
+        positions, cfg, mode=mode, kv_keep_stride=knobs.kv_keep_stride)
+    if enc_out is not None:
+        h = h + attn_mod.attention(
+            params["cross"], rms_norm(h, params["norm_cross"], cfg.norm_eps),
+            positions, cfg, mode="cross", kv_x=enc_out)
+    hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
+    if "moe" in params:
+        y, aux = moe_mod.moe(params["moe"], hn, cfg,
+                             top_k=knobs.topk_override, precision=prec,
+                             ep_axis=ep_axis, mesh=mesh)
+        h = h + y
+    else:
+        h = h + mlp_mod.mlp(params["mlp"], hn, precision=prec)
+    return h, aux
+
+
+def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
+                 knobs: ApproxKnobs = PRECISE, *,
+                 ep_axis: Optional[str] = None, mesh=None,
+                 enc_out: Optional[jax.Array] = None):
+    """Single-token decode. Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    prec = knobs.matmul_precision
+    if kind == MAMBA:
+        y, new_cache = mamba_mod.mamba_decode(
+            params["mixer"], rms_norm(h, params["norm"], cfg.norm_eps),
+            cache, cfg, precision=prec)
+        return h + y, new_cache, aux
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    kv_scale = 0.05 if knobs.kv_quant else 0.0
+    y, new_cache = attn_mod.decode_attention(
+        params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
+        position, cache, cfg, window=window, kv_scale=kv_scale)
+    h = h + y
+    if enc_out is not None:
+        h = h + attn_mod.attention(
+            params["cross"], rms_norm(h, params["norm_cross"], cfg.norm_eps),
+            position[:, None], cfg, mode="cross", kv_x=enc_out)
+    hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
+    if "moe" in params:
+        y, aux = moe_mod.moe(params["moe"], hn, cfg,
+                             top_k=knobs.topk_override, precision=prec,
+                             ep_axis=ep_axis, mesh=mesh)
+        h = h + y
+    else:
+        h = h + mlp_mod.mlp(params["mlp"], hn, precision=prec)
+    return h, new_cache, aux

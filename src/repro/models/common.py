@@ -1,0 +1,148 @@
+"""Param-spec system, norms, RoPE, and numeric helpers.
+
+Every module declares its parameters as a pytree of ``ParamSpec`` (shape +
+logical axis names). The same spec tree serves three consumers:
+
+* ``init_params``      — materialize random weights (CPU smoke / examples),
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (dry-run: NO allocation),
+* ``dist.sharding``    — logical-axis → mesh-axis rules → ``NamedSharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]           # logical axis name (or None) per dim
+    init: str = "normal"            # normal | zeros | ones | ssm_a | ssm_dt
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim of size ``n`` to every spec (for lax.scan)."""
+    return spec_tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init), tree)
+
+
+def abstract_params(spec_tree, dtype=jnp.bfloat16):
+    def mk(s: ParamSpec):
+        dt = jnp.float32 if s.init in ("ssm_a", "ssm_dt") else dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return spec_tree_map(mk, spec_tree)
+
+
+def logical_axes(spec_tree):
+    return spec_tree_map(lambda s: s.axes, spec_tree)
+
+
+def init_params(spec_tree, key, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        elif s.init == "ssm_a":        # A_log init: log(uniform[1,16])
+            out.append(jnp.log(jax.random.uniform(
+                k, s.shape, jnp.float32, 1.0, 16.0)))
+        elif s.init == "ssm_dt":       # dt bias: softplus^-1(uniform[1e-3,1e-1])
+            dt = jnp.exp(jax.random.uniform(
+                k, s.shape, jnp.float32) * (np.log(0.1) - np.log(1e-3))
+                + np.log(1e-3))
+            out.append(jnp.log(jnp.expm1(dt)))
+        else:                          # truncated-normal, fan-in scaled
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.truncated_normal(
+                k, -2.0, 2.0, s.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------- numerics --
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with fp32 restricted to (B,S,1) reductions in BOTH directions.
+
+    A plain fp32-upcast implementation leaks fp32 through autodiff into the
+    residual-stream gradients, which GSPMD then all-reduces as fp32 payloads
+    — 2x the TP activation wire bytes (EXPERIMENTS.md §Perf, mistral train
+    iteration P7). The hand-written VJP keeps every (B,S,D) tensor in the
+    activation dtype; only rowwise statistics are fp32.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv32 = jax.lax.rsqrt(var + eps)                       # (B,S,1) f32
+    return x * inv32.astype(x.dtype) * scale.astype(x.dtype), (x, inv32,
+                                                               scale)
+
+
+def _rms_bwd(eps, res, dy):
+    x, inv32, scale = res
+    d = x.shape[-1]
+    dyg = dy * scale.astype(dy.dtype)                      # (B,S,D) low-prec
+    # rowwise fp32 statistic: sum(dyg * x)
+    t = jnp.sum((dyg * x).astype(jnp.float32), axis=-1, keepdims=True)
+    coef = (inv32 ** 3 * (t / d)).astype(x.dtype)          # (B,S,1)
+    dx = dyg * inv32.astype(dy.dtype) - x * coef
+    dscale = jnp.sum((dy * x).astype(jnp.float32)
+                     * inv32, axis=tuple(range(dy.ndim - 1)))
+    return dx, dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def softcap(x, cap: float):
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Angles/sin/cos in fp32 (position precision), the rotation MULTIPLY in the
+    activation dtype: an fp32 multiply leaks fp32 into the backward pass and
+    doubles the TP partial-sum all-reduce payloads (EXPERIMENTS.md §Perf P7).
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin = jnp.sin(ang).astype(x.dtype)
+    cos = jnp.cos(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)

@@ -1,0 +1,102 @@
+"""Whisper-style encoder-decoder backbone. The conv/mel frontend is a STUB:
+``input_specs()`` provides precomputed (B, 1500, d_model) frame embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models.common import ParamSpec, rms_norm, stack_specs
+from repro.models.blocks import block_decode, block_forward, block_specs
+from repro.models.lm import (chunked_xent, init_caches, logits_fn)
+from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
+from repro.models.lm import _slice_groups
+
+
+def encdec_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed")),
+        "enc": stack_specs(block_specs(ATTN, cfg), cfg.n_encoder_layers),
+        "enc_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "dec": {"pos0": stack_specs(block_specs(ATTN, cfg, cross=True),
+                                    cfg.n_groups)},
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
+           *, remat: str = "full"):
+    """frames: (B, F, D) stub embeddings -> (B, F, D) memory."""
+    from repro.dist.annotate import constrain_batch
+    h = constrain_batch(frames.astype(params["enc_norm"].dtype))
+    B, F, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def body(h, layer_params):
+        h, _ = block_forward(ATTN, layer_params, h, positions, cfg, knobs,
+                             causal=False)
+        return constrain_batch(h), None
+
+    if remat in ("full", "2level", "dots"):
+        body = jax.checkpoint(body)
+    from repro import flags
+    h, _ = jax.lax.scan(body, h, params["enc"], unroll=flags.unroll("enc"))
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_hidden(params, tokens, enc_out, cfg: ModelConfig,
+                  knobs: ApproxKnobs = PRECISE, *, remat: str = "full"):
+    from repro.dist.annotate import constrain_batch
+    h = constrain_batch(params["embed"][tokens])
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    keep = keep_groups(cfg.n_groups, knobs.layer_skip)
+    groups = _slice_groups(params["dec"], keep, cfg.n_groups)
+
+    def body(h, group_params):
+        h, _ = block_forward(ATTN, group_params["pos0"], h, positions, cfg,
+                             knobs, enc_out=enc_out)
+        return constrain_batch(h), None
+
+    if remat in ("full", "2level", "dots"):
+        body = jax.checkpoint(body)
+    from repro import flags
+    h, _ = jax.lax.scan(body, h, groups, unroll=flags.unroll("groups"))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig,
+                knobs: ApproxKnobs = PRECISE, *, remat: str = "full",
+                ep_axis=None, mesh=None, aux_coef: float = 0.0):
+    """batch: {"tokens": (B,S+1), "frames": (B,F,D)}."""
+    tokens, frames = batch["tokens"], batch["frames"]
+    if knobs.token_drop > 0:
+        b_keep = max(1, int(tokens.shape[0] * (1.0 - knobs.token_drop)))
+        tokens, frames = tokens[:b_keep], frames[:b_keep]
+    enc_out = encode(params, frames, cfg, knobs, remat=remat)
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    h = decode_hidden(params, inputs, enc_out, cfg, knobs, remat=remat)
+    mask = jnp.ones_like(labels, jnp.float32)
+    loss = chunked_xent(params, h, labels, mask, cfg)
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+def encdec_decode_step(params, tokens, position, caches, enc_out,
+                       cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+    """One-token decode with cached decoder self-attention."""
+    h = params["embed"][tokens[:, 0]][:, None, :]
+
+    def body(h, xs):
+        group_params, group_caches = xs
+        h, nc, _ = block_decode(ATTN, group_params["pos0"], h, position,
+                                group_caches[0], cfg, knobs, enc_out=enc_out)
+        return h, (nc,)
+
+    from repro import flags
+    h, new_caches = jax.lax.scan(body, h, (params["dec"], caches),
+                                 unroll=flags.unroll("groups"))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, h[:, 0], cfg), new_caches

@@ -1,0 +1,261 @@
+"""Decoder-only LM (all 10 archs route through here; whisper adds an encoder
+in ``encdec.py``). Layers are scanned in *groups* — one group = one period of
+``cfg.pattern`` — so HLO size is independent of depth. Zamba2's shared
+attention block lives outside the scanned stack and is closed over (weights
+reused every invocation, gradients accumulate through the scan).
+
+Cross-entropy is computed in sequence chunks under ``jax.checkpoint`` so the
+(B,S,V) logit tensor never materializes — required for 256k-vocab archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, LOCAL_ATTN, MAMBA, SHARED_ATTN,
+                                ModelConfig)
+from repro.models.common import (ParamSpec, init_params, rms_norm, softcap,
+                                 stack_specs)
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models.blocks import block_decode, block_forward, block_specs
+from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
+
+
+# ------------------------------------------------------------------ specs --
+
+def lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"))
+    groups: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.pattern):
+        if kind == SHARED_ATTN:
+            continue
+        groups[f"pos{j}"] = stack_specs(block_specs(kind, cfg), cfg.n_groups)
+    specs["groups"] = groups
+    if SHARED_ATTN in cfg.pattern:
+        specs["shared"] = block_specs(ATTN, cfg)
+    return specs
+
+
+def init_lm(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    return init_params(lm_specs(cfg), key, dtype)
+
+
+def _slice_groups(groups, keep: Tuple[int, ...], n_groups: int):
+    if len(keep) == n_groups:
+        return groups
+    idx = np.asarray(keep)
+    return jax.tree.map(lambda p: p[idx], groups)
+
+
+# ---------------------------------------------------------------- forward --
+
+def forward_hidden(params, tokens, cfg: ModelConfig,
+                   knobs: ApproxKnobs = PRECISE, *,
+                   ep_axis: Optional[str] = None, mesh=None,
+                   prefix_embeds: Optional[jax.Array] = None,
+                   remat: str = "full"):
+    """tokens: (B, S_text) -> (h (B,S,D) final-normed, aux loss).
+
+    ``prefix_embeds``: (B, P, D) stub modality embeddings prepended (vlm).
+    """
+    from repro.dist.annotate import constrain_batch
+    h = params["embed"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = constrain_batch(h)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    keep = keep_groups(cfg.n_groups, knobs.layer_skip)
+    groups = _slice_groups(params["groups"], keep, cfg.n_groups)
+    shared = params.get("shared")
+
+    def group_body(carry, group_params):
+        h, aux = carry
+        for j, kind in enumerate(cfg.pattern):
+            p = shared if kind == SHARED_ATTN else group_params[f"pos{j}"]
+            h, a = block_forward(kind, p, h, positions, cfg, knobs,
+                                 ep_axis=ep_axis, mesh=mesh)
+            aux = aux + a
+        return (constrain_batch(h), aux), None
+
+    from repro import flags
+    carry0 = (h, jnp.zeros((), jnp.float32))
+    if remat == "2level":
+        # sqrt-depth activation memory: nested checkpointed scans store
+        # ~(no + ni) layer boundaries instead of G (needed for 88-layer archs)
+        no, ni = _near_sqrt_factors(len(keep))
+        if no > 1:
+            g2 = jax.tree.map(
+                lambda p: p.reshape(no, ni, *p.shape[1:]), groups)
+
+            def outer_body(carry, gp_outer):
+                c, _ = jax.lax.scan(jax.checkpoint(group_body), carry,
+                                    gp_outer, unroll=flags.unroll("groups"))
+                return c, None
+
+            (h, aux), _ = jax.lax.scan(
+                jax.checkpoint(outer_body), carry0, g2,
+                unroll=flags.unroll("groups_outer"))
+            return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+        remat = "full"                      # prime group count: fall back
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+    elif remat == "dots":
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    (h, aux), _ = jax.lax.scan(group_body, carry0, groups,
+                               unroll=flags.unroll("groups"))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def _near_sqrt_factors(g: int):
+    """(no, ni) with no*ni == g, no as close to sqrt(g) as possible."""
+    best = (1, g)
+    for no in range(2, int(g ** 0.5) + 1):
+        if g % no == 0:
+            best = (no, g // no)
+    return best
+
+
+def _unembed(params, cfg: ModelConfig):
+    if "unembed" in params:
+        return params["unembed"]
+    return params["embed"].T
+
+
+def logits_fn(params, h, cfg: ModelConfig):
+    """h: (..., D) -> (..., V), softcapped. Small inputs only (decode)."""
+    logits = (h @ _unembed(params, cfg)).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def ce_chunk(s: int, target: int = 512) -> int:
+    """Largest divisor of ``s`` that is <= target (CE chunk length)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_xent(params, h, labels, mask, cfg: ModelConfig, *,
+                 chunk: int = 512):
+    """Mean next-token CE without materializing full logits.
+
+    h: (B,S,D); labels: (B,S) (already shifted); mask: (B,S) float weights.
+    """
+    B, S, D = h.shape
+    C = ce_chunk(S, chunk)
+    nc = S // C
+    from repro.dist.annotate import constrain_batch, constrain_vocab
+    emb = _unembed(params, cfg)
+    h = constrain_batch(h)
+    hs = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, C).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, lc, mc = xs
+        hc = constrain_batch(hc)          # (B, C, D): keep batch sharded
+        logits = (hc @ emb).astype(jnp.float32)
+        logits = constrain_vocab(logits)  # (B, C, V): vocab stays sharded
+        logits = softcap(logits, cfg.final_softcap)
+        # gather-free gold logit: take_along_axis over a sharded vocab dim
+        # forces GSPMD to replicate the whole logits matmul (21x FLOPs,
+        # EXPERIMENTS.md §Perf); a one-hot contraction keeps vocab sharded.
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, constrain_vocab(onehot))
+        loss_sum, w_sum = carry
+        return (loss_sum + jnp.sum((lse - gold) * mc),
+                w_sum + jnp.sum(mc)), None
+
+    from repro import flags
+    (loss_sum, w_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms), unroll=flags.unroll("ce"))
+    return loss_sum / jnp.maximum(w_sum, 1.0)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+            ep_axis: Optional[str] = None, mesh=None, remat: str = "full",
+            aux_coef: float = 0.01):
+    """batch: {"tokens": (B,S+1) int32, optional "prefix_embeds"}."""
+    tokens = batch["tokens"]
+    if knobs.token_drop > 0:                       # batch perforation
+        b_keep = max(1, int(tokens.shape[0] * (1.0 - knobs.token_drop)))
+        tokens = tokens[:b_keep]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    prefix = batch.get("prefix_embeds")
+    if prefix is not None and knobs.token_drop > 0:
+        prefix = prefix[: tokens.shape[0]]
+    h, aux = forward_hidden(params, inputs, cfg, knobs, ep_axis=ep_axis,
+                            mesh=mesh, prefix_embeds=prefix, remat=remat)
+    if prefix is not None:
+        P = prefix.shape[1]
+        # prefix positions predict nothing; text position i predicts label i
+        h = h[:, P:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    loss = chunked_xent(params, h, labels, mask, cfg)
+    return loss + aux_coef * aux, {"ce": loss, "aux": aux}
+
+
+# ----------------------------------------------------------------- decode --
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, quantized: bool = False):
+    """Stacked (over groups) caches, one entry per pattern position."""
+    def one(kind):
+        if kind == MAMBA:
+            return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+        length = min(cfg.window, max_len) if kind == LOCAL_ATTN else max_len
+        return attn_mod.init_cache(cfg, batch, length, dtype,
+                                   quantized=quantized)
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+            tree)
+    return tuple(stack(one(kind)) for kind in cfg.pattern)
+
+
+def decode_step(params, tokens, position, caches, cfg: ModelConfig,
+                knobs: ApproxKnobs = PRECISE, *,
+                ep_axis: Optional[str] = None, mesh=None,
+                enc_out: Optional[jax.Array] = None):
+    """tokens: (B,1) int32; position: (B,) absolute positions.
+
+    Returns (logits (B,V) fp32, new_caches).
+    """
+    h = params["embed"][tokens[:, 0]][:, None, :]
+    shared = params.get("shared")
+
+    def group_body(h, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for j, kind in enumerate(cfg.pattern):
+            p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
+            h, nc, _ = block_decode(kind, p, h, position, group_caches[j],
+                                    cfg, knobs, ep_axis=ep_axis, mesh=mesh,
+                                    enc_out=enc_out)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    from repro import flags
+    h, new_caches = jax.lax.scan(group_body, h,
+                                 (params["groups"], caches),
+                                 unroll=flags.unroll("groups"))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, h[:, 0], cfg), new_caches

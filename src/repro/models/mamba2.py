@@ -1,0 +1,124 @@
+"""Mamba2 (SSD) mixer: projections -> causal depthwise conv -> SSD scan ->
+gated RMSNorm -> out_proj. Train/prefill uses the chunked SSD path (Pallas
+kernel on TPU, chunked jnp elsewhere); decode is an O(1) single-token state
+update — the reason SSM/hybrid archs run the ``long_500k`` cell at all.
+
+Projections are stored as separate matrices (z / x / bc / dt) rather than one
+fused ``in_proj`` so that TP sharding of the inner dim never slices across a
+z|x|B|C boundary mid-shard (B/C are replicated — they broadcast over heads).
+Parameter totals match the fused layout exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, rms_norm
+from repro.kernels import ops as kops
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return di, nh, s.d_state
+
+
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    di, nh, n = _dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "in_z": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "in_x": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "in_bc": ParamSpec((d, 2 * n), ("embed", None)),
+        "in_dt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((di, w), ("ssm_inner", None)),
+        "conv_bc": ParamSpec((2 * n, w), (None, None)),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="ssm_a"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="ssm_dt"),
+        "gate_norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv_x: jax.Array   # (B, W-1, di) trailing conv inputs
+    conv_bc: jax.Array  # (B, W-1, 2N)
+    state: jax.Array    # (B, nh, head_dim, d_state) fp32 SSD state
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> MambaCache:
+    di, nh, n = _dims(cfg)
+    w = cfg.ssm.conv_width
+    return MambaCache(
+        conv_x=jnp.zeros((batch, w - 1, di), dtype),
+        conv_bc=jnp.zeros((batch, w - 1, 2 * n), dtype),
+        state=jnp.zeros((batch, nh, cfg.ssm.head_dim, n), jnp.float32))
+
+
+def _causal_conv(u, conv_w, history=None):
+    """Depthwise causal conv via shifted adds. u: (B,S,C); conv_w: (C,W)."""
+    W = conv_w.shape[-1]
+    B, S, C = u.shape
+    if history is None:
+        history = jnp.zeros((B, W - 1, C), u.dtype)
+    padded = jnp.concatenate([history, u], axis=1)       # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for j in range(W):
+        out = out + padded[:, j:j + S].astype(jnp.float32) * conv_w[:, j]
+    return jax.nn.silu(out).astype(u.dtype), padded[:, S:]
+
+
+def mamba_mixer(params, x, cfg: ModelConfig, *, precision: str = "bf16"):
+    """Full-sequence SSD mixer. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, nh, n = _dims(cfg)
+    mm = kops.matmul(precision)
+    z = mm(x, params["in_z"])
+    xs, _ = _causal_conv(mm(x, params["in_x"]), params["conv_x"])
+    bc, _ = _causal_conv(x @ params["in_bc"], params["conv_bc"])
+    dt_raw = x @ params["in_dt"]
+    b, c = jnp.split(bc, 2, axis=-1)
+    xs4 = xs.reshape(B, S, nh, cfg.ssm.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y = kops.ssd(xs4, dt, a, b, c, chunk=cfg.ssm.chunk,
+                 d_skip=params["d_skip"])
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return mm(y, params["out_proj"])
+
+
+def mamba_decode(params, x, cache: MambaCache, cfg: ModelConfig, *,
+                 precision: str = "bf16"):
+    """Single-token decode. x: (B,1,D) -> ((B,1,D), new_cache)."""
+    B, _, D = x.shape
+    di, nh, n = _dims(cfg)
+    mm = kops.matmul(precision)
+    z = mm(x, params["in_z"])
+    xs, hist_x = _causal_conv(mm(x, params["in_x"]), params["conv_x"],
+                              history=cache.conv_x)
+    bc, hist_bc = _causal_conv(x @ params["in_bc"], params["conv_bc"],
+                               history=cache.conv_bc)
+    dt_raw = x @ params["in_dt"]
+    b, c = jnp.split(bc[:, 0], 2, axis=-1)               # (B, N)
+    xs3 = xs[:, 0].reshape(B, nh, cfg.ssm.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,nh)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)
+    bf = b.astype(jnp.float32)
+    state = (cache.state * da[..., None, None]
+             + (dt[..., None] * xs3)[..., None] * bf[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs3
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return mm(y, params["out_proj"]), MambaCache(hist_x, hist_bc, state)

@@ -1,0 +1,29 @@
+"""SwiGLU MLP with optional int8-quantized matmuls (the Pliant lower-precision
+knob): weights are quantized per-output-channel; on TPU the quantized path is
+the ``kernels/int8_matmul`` Pallas kernel, on CPU the jnp reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.kernels import ops as kops
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, *, precision: str = "bf16"):
+    # silu stays in the activation dtype: an fp32 gate leaks fp32 into the
+    # backward TP all-reduces (EXPERIMENTS.md §Perf P7)
+    mm = kops.matmul(precision)
+    gate = jax.nn.silu(mm(x, params["wi_gate"]))
+    up = mm(x, params["wi_up"])
+    return mm(gate * up, params["wo"])

@@ -1,0 +1,169 @@
+"""Top-k MoE layer with sort-based dispatch and expert parallelism.
+
+Dispatch is index-based (argsort by expert, capacity-bounded slots) — never a
+one-hot dispatch tensor — so activation inflation is exactly tokens x top_k.
+Distributed mode runs under a FULLY-MANUAL ``shard_map`` (every mesh axis):
+tokens are flat-sharded over (pod, data, model), experts are sharded over
+``model``, and two ``all_to_all``s move capacity slots to/from expert owners.
+Under the fsdp_tp policy the expert weights' embed dim is FSDP-sharded over
+``data`` and all-gathered on entry (hand-written — partial-manual shard_map
+transposes of all_to_all crash XLA CPU, see EXPERIMENTS.md §Dry-run).
+
+Pliant knob: ``top_k`` override (expert perforation) — routing to fewer
+experts cuts active FLOPs and all-to-all bytes at bounded quality loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.kernels import ops as kops
+
+
+def moe_specs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        # gate stays replicated (tiny): routing must see full d
+        "wg": ParamSpec((d, e), (None, None)),
+        "wi_gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wi_up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, cf: float,
+              align: int = 8) -> int:
+    c = int(cf * n_tokens * top_k / n_experts)
+    return max(align, -(-c // align) * align)
+
+
+def _route(x2, wg, top_k: int, capacity: int, n_experts: int):
+    """x2: (T, D). Returns (slots (T,k), weights (T,k), keep (T,k), aux)."""
+    logits = (x2 @ wg).astype(jnp.float32)                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, top_k)                 # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat_e = ids.reshape(-1)                                # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(flat_e.shape[0]) - seg_start[sorted_e]
+    keep_sorted = rank < capacity
+    slot_sorted = sorted_e * capacity + jnp.minimum(rank, capacity - 1)
+    slot = jnp.zeros_like(flat_e).at[order].set(slot_sorted)
+    keep = jnp.zeros(flat_e.shape, bool).at[order].set(keep_sorted)
+    me = jnp.mean(probs, axis=0)
+    ce = counts.astype(jnp.float32) / flat_e.shape[0]
+    aux = n_experts * jnp.sum(me * ce)
+    return (slot.reshape(-1, top_k), gate.astype(x2.dtype),
+            keep.reshape(-1, top_k), aux)
+
+
+def _expert_ffn(xe, wi_gate, wi_up, wo, precision: str):
+    """xe: (E_loc, C', D); weights (E_loc, D, F) / (E_loc, F, D)."""
+    if precision == "int8":
+        def one(x, wg_, wu_, wo_):
+            g = jax.nn.silu(kops.quantized_matmul(x, wg_).astype(jnp.float32))
+            u = kops.quantized_matmul(x, wu_)
+            return kops.quantized_matmul(g.astype(x.dtype) * u, wo_)
+        return jax.vmap(one)(xe, wi_gate, wi_up, wo)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wi_gate,
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", xe, wi_up)
+    return jnp.einsum("ecf,efd->ecd", g.astype(xe.dtype) * u, wo)
+
+
+def _moe_local(params, x2, cfg: ModelConfig, top_k: int, precision: str,
+               ep_axis: Optional[str]):
+    """Core MoE on local tokens x2: (T, D). Inside shard_map when ``ep_axis``
+    is set (experts sharded over that axis), else single-device."""
+    E = cfg.moe.n_experts
+    T = x2.shape[0]
+    C = _capacity(T, top_k, E, cfg.moe.capacity_factor)
+    slot, gate, keep, aux = _route(x2, params["wg"], top_k, C, E)
+    flat_slot = slot.reshape(-1)
+    flat_keep = keep.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(T), top_k)
+    buf = jnp.zeros((E * C, x2.shape[1]), x2.dtype)
+    buf = buf.at[flat_slot].add(
+        jnp.where(flat_keep[:, None], x2[tok_idx], 0))
+    if ep_axis is not None:
+        xe = buf.reshape(E, C, -1)
+        xe = jax.lax.all_to_all(xe, ep_axis, split_axis=0, concat_axis=1,
+                                tiled=True)
+        ye = _expert_ffn(xe, params["wi_gate"], params["wi_up"], params["wo"],
+                         precision)
+        ye = jax.lax.all_to_all(ye, ep_axis, split_axis=1, concat_axis=0,
+                                tiled=True)
+        buf_out = ye.reshape(E * C, -1)
+    else:
+        xe = buf.reshape(E, C, -1)
+        ye = _expert_ffn(xe, params["wi_gate"], params["wi_up"], params["wo"],
+                         precision)
+        buf_out = ye.reshape(E * C, -1)
+    y = buf_out[flat_slot].reshape(T, top_k, -1)
+    y = jnp.sum(y * (gate * keep)[..., None], axis=1)
+    return y.astype(x2.dtype), aux
+
+
+def moe(params, x, cfg: ModelConfig, *, top_k: int = 0,
+        precision: str = "bf16", ep_axis: Optional[str] = None,
+        mesh=None):
+    """x: (B, S, D) -> (y, aux_loss). ``ep_axis``: mesh axis for EP."""
+    B, S, D = x.shape
+    top_k = top_k or cfg.moe.top_k
+    if ep_axis is None or mesh is None:
+        y, aux = _moe_local(params, x.reshape(-1, D), cfg, top_k, precision,
+                            None)
+        return y.reshape(B, S, D), aux
+
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import annotate
+    T = B * S
+    all_axes = tuple(mesh.shape.keys())
+    n_all = int(np.prod(list(mesh.shape.values())))
+    if T % n_all == 0:
+        tok_axes = all_axes                     # flat tokens over every axis
+    elif T % mesh.shape[ep_axis] == 0:
+        tok_axes = (ep_axis,)                   # decode-size batches
+    else:
+        y, aux = _moe_local(params, x.reshape(-1, D), cfg, top_k, precision,
+                            None)
+        return y.reshape(B, S, D), aux          # tiny batch: replicated
+    fsdp = annotate.FSDP_AXIS
+    fsdp = fsdp if (fsdp in mesh.shape and
+                    cfg.d_model % mesh.shape.get(fsdp, 1) == 0) else None
+
+    def body(params_loc, x_loc):
+        p = dict(params_loc)
+        if fsdp is not None:                    # hand-written FSDP unshard
+            p["wi_gate"] = jax.lax.all_gather(p["wi_gate"], fsdp, axis=1,
+                                              tiled=True)
+            p["wi_up"] = jax.lax.all_gather(p["wi_up"], fsdp, axis=1,
+                                            tiled=True)
+            p["wo"] = jax.lax.all_gather(p["wo"], fsdp, axis=2, tiled=True)
+        y, aux = _moe_local(p, x_loc, cfg, top_k, precision, ep_axis)
+        for ax in tok_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return y, aux
+
+    pspec = {
+        "wg": P(),
+        "wi_gate": P(ep_axis, fsdp, None),
+        "wi_up": P(ep_axis, fsdp, None),
+        "wo": P(ep_axis, None, fsdp),
+    }
+    y2, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P(tok_axes, None)),
+        out_specs=(P(tok_axes, None), P()),
+        axis_names=set(all_axes), check_vma=False)(params, x.reshape(-1, D))
+    return y2.reshape(B, S, D), aux

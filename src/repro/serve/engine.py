@@ -1,0 +1,114 @@
+"""Batched serving engine: continuous-batching slots over the decode step.
+
+Each slot holds one request's progress; finished slots are refilled from the
+queue without stopping the batch ("continuous batching"). The Pliant serving
+knobs (int8 matmuls, int8 KV cache) select which compiled decode executable
+runs — switched between steps exactly like training variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx.knobs import ApproxKnobs, PRECISE
+from repro.configs.base import ModelConfig
+from repro.models import api, lm
+from repro.train import step as step_mod
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    batch_slots: int
+    max_len: int
+    knobs: ApproxKnobs = PRECISE
+    temperature: float = 0.0
+    params: object = None
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            step_mod.make_serve_step(self.cfg, self.knobs))
+        self.caches = lm.init_caches(
+            self.cfg, self.batch_slots, self.max_len,
+            dtype=jnp.float32, quantized=self.knobs.kv_quant)
+        self.positions = np.zeros(self.batch_slots, np.int32)
+        self.slots: List[Optional[Request]] = [None] * self.batch_slots
+        self.pending: List[Request] = []
+        self.cur_tokens = np.zeros(self.batch_slots, np.int32)
+        self.step_latencies: List[float] = []
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _reset_slot_cache(self, i: int) -> None:
+        """Invalidate slot i's cache rows (stale entries must never attend)."""
+        def reset(c):
+            if hasattr(c, "pos"):            # attention KVCache
+                return c._replace(pos=c.pos.at[:, i].set(-1))
+            return c._replace(                # MambaCache
+                conv_x=c.conv_x.at[:, i].set(0),
+                conv_bc=c.conv_bc.at[:, i].set(0),
+                state=c.state.at[:, i].set(0))
+        self.caches = tuple(reset(c) for c in self.caches)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.batch_slots):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slots[i] = req
+                self._reset_slot_cache(i)
+                # prompt tokens are fed through decode steps (cache warmup)
+                req._cursor = 0          # type: ignore[attr-defined]
+                self.positions[i] = 0
+                self.cur_tokens[i] = req.prompt[0]
+
+    def step(self) -> None:
+        """One engine step: decode one token for every active slot."""
+        import time
+        self._fill_slots()
+        if all(s is None for s in self.slots):
+            return
+        t0 = time.perf_counter()
+        toks = jnp.asarray(self.cur_tokens)[:, None]
+        pos = jnp.asarray(self.positions)
+        logits, self.caches = self._decode(self.params, toks, pos,
+                                           self.caches)
+        logits = np.asarray(logits)
+        self.step_latencies.append(time.perf_counter() - t0)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = req._cursor                   # type: ignore[attr-defined]
+            self.positions[i] += 1
+            if cur + 1 < len(req.prompt):
+                # still consuming the prompt
+                req._cursor = cur + 1           # type: ignore[attr-defined]
+                self.cur_tokens[i] = req.prompt[cur + 1]
+                continue
+            nxt = int(np.argmax(logits[i]))
+            req.out.append(nxt)
+            self.cur_tokens[i] = nxt
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slots[i] = None            # slot freed: continuous batch
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.pending or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,80 @@
+"""AdamW with cosine schedule, global-norm clipping, fp32 moments.
+
+Pure-jnp (no optax in this environment). Moment tensors inherit the param
+shardings (passed through ``jax.tree.map`` structurally), so optimizer state
+is FSDP/TP-sharded exactly like the weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: object
+    v: object
+
+
+class OptConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_opt(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = cfg.lr * (step + 1) / max(cfg.warmup, 1)
+    frac = jnp.clip((step - cfg.warmup)
+                    / max(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup, warm, cos).astype(jnp.float32)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt: OptState, params, cfg: OptConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = opt.step + 1
+    lr = lr_at(cfg, opt.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p_new = (p.astype(jnp.float32)
+                 - lr * (update + decay * p.astype(jnp.float32)))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    gl, treedef = jax.tree.flatten(grads)
+    res = [upd(g, m, v, p) for g, m, v, p in
+           zip(gl, jax.tree.leaves(opt.m), jax.tree.leaves(opt.v),
+               jax.tree.leaves(params))]
+    new_params = treedef.unflatten([r[0] for r in res])
+    new_m = treedef.unflatten([r[1] for r in res])
+    new_v = treedef.unflatten([r[2] for r in res])
+    return new_params, OptState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,116 @@
+"""Train/serve step factories, parameterized by ``ApproxKnobs``.
+
+``make_train_step(cfg, knobs, ...)`` returns a pure function suitable for
+``jax.jit`` — one per approximate variant. The Pliant actuator (core/variants)
+compiles each variant ONCE and switches which executable runs at a step
+boundary: the TPU analogue of DynamoRIO's signal-triggered function swap.
+
+Microbatching (gradient accumulation) runs as a ``lax.scan`` over static
+micro-slices; gradients accumulate in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.approx.knobs import ApproxKnobs, PRECISE
+from repro.train import optim
+
+
+def _micro_split(batch, n_micro: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                    opt_cfg: optim.OptConfig = optim.OptConfig(),
+                    n_micro: int = 1, remat: str = "full",
+                    ep_axis: Optional[str] = None, mesh=None,
+                    donate: bool = True):
+    """Returns step(params, opt, batch) -> (params, opt, metrics)."""
+    loss_fn = api.loss_fn(cfg)
+
+    def loss_of(params, micro_batch):
+        loss, metrics = loss_fn(params, micro_batch, knobs=knobs,
+                                ep_axis=ep_axis, mesh=mesh, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def step(params, opt, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _micro_split(batch, n_micro)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            from repro import flags
+            (gsum, lsum), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro,
+                unroll=flags.unroll("micro"))
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        params, opt, opt_metrics = optim.adamw_update(grads, opt, params,
+                                                      opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt, metrics
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                    ep_axis: Optional[str] = None, mesh=None):
+    """Returns step(params, tokens, position, caches[, enc_out])
+    -> (logits, new_caches). One new token against the KV/SSM caches."""
+    decode = api.decode_fn(cfg)
+
+    if cfg.family == "encdec":
+        def step(params, tokens, position, caches, enc_out):
+            return decode(params, tokens, position, caches, enc_out,
+                          knobs=knobs)
+        return step
+
+    def step(params, tokens, position, caches):
+        return decode(params, tokens, position, caches, knobs=knobs,
+                      ep_axis=ep_axis, mesh=mesh)
+    return step
+
+
+def make_prefill_fn(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                    ep_axis: Optional[str] = None, mesh=None,
+                    remat: str = "full"):
+    """Full-sequence forward returning last-token logits (the prefill cell)."""
+    from repro.models import encdec as encdec_mod
+    from repro.models import lm as lm_mod
+
+    def prefill(params, batch):
+        if cfg.family == "encdec":
+            enc_out = encdec_mod.encode(params, batch["frames"], cfg, knobs,
+                                        remat=remat)
+            h = encdec_mod.decode_hidden(params, batch["tokens"][:, :-1],
+                                         enc_out, cfg, knobs, remat=remat)
+        else:
+            h, _ = lm_mod.forward_hidden(
+                params, batch["tokens"][:, :-1], cfg, knobs,
+                ep_axis=ep_axis, mesh=mesh, remat=remat,
+                prefix_embeds=batch.get("prefix_embeds"))
+        return lm_mod.logits_fn(params, h[:, -1], cfg)
+
+    return prefill

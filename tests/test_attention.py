@@ -1,0 +1,121 @@
+"""Model-level attention: chunked-causal / banded-window paths vs the naive
+oracle, KV-cache decode equivalence, ring-buffer windows, KV quantization."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ref
+from repro.models import attention as A
+
+CFG = get_config("phi4-mini-3.8b-smoke")
+
+
+def _params(cfg, key=0):
+    from repro.models.common import init_params
+    return init_params(A.attn_specs(cfg), jax.random.PRNGKey(key),
+                       jnp.float32)
+
+
+def _oracle(params, x, cfg, *, causal=True, window=0):
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(*x.shape[:2], cfg.n_heads, hd)
+    k = (x @ params["wk"]).reshape(*x.shape[:2], cfg.n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(*x.shape[:2], cfg.n_kv_heads, hd)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    from repro.models.common import apply_rope
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = ref.mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                    cap=cfg.attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(*x.shape[:2], cfg.q_dim)
+    return o @ params["wo"]
+
+
+@pytest.mark.parametrize("q_chunk", [8, 16, 64])
+def test_causal_chunked_matches_oracle(q_chunk):
+    params = _params(CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, CFG.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    got = A.attention(params, x, pos, CFG, mode="causal", q_chunk=q_chunk)
+    want = _oracle(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 16, 32])
+def test_banded_window_matches_oracle(window):
+    cfg = dataclasses.replace(CFG, window=window)
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    got = A.attention(params, x, pos, cfg, mode="window")
+    want = _oracle(params, x, cfg, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_changes_output():
+    cfg = dataclasses.replace(CFG, attn_softcap=5.0)
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(32), (1, 32))
+    capped = A.attention(params, x, pos, cfg, mode="causal")
+    plain = A.attention(params, x, pos, CFG, mode="causal")
+    assert float(jnp.max(jnp.abs(capped - plain))) > 1e-5
+    want = _oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(capped), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kv_perforation_reduces_context():
+    params = _params(CFG)
+    S = 64
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, S, CFG.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S), (1, S))
+    precise = A.attention(params, x, pos, CFG, q_chunk=8)
+    perf = A.attention(params, x, pos, CFG, q_chunk=8, kv_keep_stride=2)
+    # first two chunks identical (diagonal + previous always kept)
+    np.testing.assert_allclose(np.asarray(perf[:, :16]),
+                               np.asarray(precise[:, :16]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(perf - precise))) > 1e-6
+
+
+def test_decode_ring_buffer_window():
+    """Ring cache smaller than sequence: decode == windowed full attention."""
+    W = 16
+    cfg = dataclasses.replace(CFG, window=W)
+    params = _params(cfg)
+    S = 48
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, S, cfg.d_model)) * 0.3
+    want = _oracle(params, x, cfg, window=W)
+    cache = A.init_cache(cfg, 2, W, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.decode_attention(
+            params, x[:, t:t + 1], jnp.full((2,), t, jnp.int32), cache, cfg,
+            window=W)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_decode_kv_quantization_close():
+    params = _params(CFG)
+    S = 24
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, S, CFG.d_model)) * 0.1
+    cache_p = A.init_cache(CFG, 1, S, dtype=jnp.float32)
+    cache_q = A.init_cache(CFG, 1, S, dtype=jnp.float32, quantized=True)
+    for t in range(S):
+        pos = jnp.full((1,), t, jnp.int32)
+        op, cache_p = A.decode_attention(params, x[:, t:t+1], pos, cache_p,
+                                         CFG)
+        oq, cache_q = A.decode_attention(params, x[:, t:t+1], pos, cache_q,
+                                         CFG, kv_scale=0.01)
+    rel = float(jnp.linalg.norm(oq - op) / jnp.linalg.norm(op))
+    assert rel < 0.05, rel
+    assert cache_q.k.dtype == jnp.int8

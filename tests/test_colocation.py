@@ -1,0 +1,121 @@
+"""Colocation model calibration + end-to-end Pliant simulation: reproduces
+the paper's headline claims (precise violates QoS by the published bands;
+Pliant meets QoS at <=5% quality loss; round-robin keeps losses balanced)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.colocation import (SERVICES, BatchJob, interference_of,
+                                   simulate)
+from repro.core.explorer import explore
+
+# paper violation bands under precise colocation (Fig. 5): memcached
+# 1.46-3.8x, NGINX 2.1-9.8x, MongoDB 2.08-5.91x — our calibration targets
+# "considerable violation" within loose versions of those bands
+BANDS = {"token-serve": (1.2, 4.5), "search-prefill": (1.4, 10.5),
+         "embed-api": (1.1, 6.5)}
+
+
+def _job(arch="phi4-mini-3.8b", serving=False, seed=0):
+    cfg = get_config(arch)
+    table = explore(cfg, SHAPES["train_4k"], serving=serving)
+    return BatchJob(name=arch, table=table, total_work=300.0)
+
+
+@pytest.mark.parametrize("svc_name", list(SERVICES))
+def test_precise_colocation_violates_in_band(svc_name):
+    svc = SERVICES[svc_name]
+    lo, hi = BANDS[svc_name]
+    for arch in ["phi4-mini-3.8b", "mamba2-780m", "olmoe-1b-7b"]:
+        job = _job(arch)
+        res = simulate(svc, [job], precise_only=True, horizon_s=60, seed=1)
+        mult = np.median([p.p99 for p in res.timeline]) / svc.qos_target_s
+        assert lo <= mult <= hi, (svc_name, arch, mult)
+
+
+@pytest.mark.parametrize("svc_name", list(SERVICES))
+def test_pliant_meets_qos(svc_name):
+    """Paper Fig. 5 metric: the run's overall tail latency sits at/below QoS
+    (bars under the line), with most intervals individually met."""
+    svc = SERVICES[svc_name]
+    job = _job("phi4-mini-3.8b")
+    res = simulate(svc, [job], horizon_s=360, seed=2)
+    median_p99 = float(np.median([p.p99 for p in res.timeline[3:]]))
+    assert median_p99 <= svc.qos_target_s * 1.02, (svc_name, median_p99)
+    assert res.qos_met_frac > 0.7, (svc_name, res.qos_met_frac)
+    assert job.quality_loss <= 0.055, job.quality_loss
+
+
+def test_pliant_quality_loss_near_paper_average():
+    """Across services x archs, mean loss ~2% (paper: 2.1%), max <= 5.5%."""
+    losses = []
+    for svc_name in SERVICES:
+        for arch in ["phi4-mini-3.8b", "olmoe-1b-7b", "mamba2-780m",
+                     "gemma2-27b"]:
+            job = _job(arch)
+            res = simulate(SERVICES[svc_name], [job], horizon_s=300,
+                           seed=hash((svc_name, arch)) % 2**31)
+            losses.append(job.quality_loss)
+    assert np.mean(losses) < 0.04, np.mean(losses)
+    assert max(losses) <= 0.055, max(losses)
+
+
+def test_lenient_service_allows_precise_mode():
+    """MongoDB-analogue at moderate load (paper Fig. 8: below ~80-85% load
+    MongoDB lets colocated apps run precise): significant precise fraction,
+    strictly more than under the strict per-token service."""
+    svc = SERVICES["embed-api"]
+    job = _job("mamba2-780m")
+    res = simulate(svc, [job], horizon_s=300, seed=3, load_frac=0.55)
+    precise_frac = np.mean([p.variants[0] == 0 for p in res.timeline])
+    strict_job = _job("mamba2-780m")
+    res2 = simulate(SERVICES["token-serve"], [strict_job], horizon_s=300,
+                    seed=3, load_frac=0.775)
+    strict_frac = np.mean([p.variants[0] == 0 for p in res2.timeline])
+    assert precise_frac > 0.3, precise_frac
+    assert precise_frac > strict_frac, (precise_frac, strict_frac)
+
+
+def test_multiapp_round_robin_balances_losses():
+    svc = SERVICES["search-prefill"]
+    jobs = [_job("phi4-mini-3.8b"), _job("olmoe-1b-7b"),
+            _job("mamba2-780m")]
+    for j in jobs:
+        j.total_work = 900.0         # steady state dominates the transient
+    res = simulate(svc, jobs, horizon_s=420, seed=4)
+    median_p99 = float(np.median([p.p99 for p in res.timeline[5:]]))
+    assert median_p99 <= svc.qos_target_s * 1.05
+    assert res.qos_met_frac > 0.65
+    losses = [j.quality_loss for j in jobs]
+    assert max(losses) - min(losses) < 0.03, losses
+    assert all(l <= 0.055 for l in losses)
+
+
+def test_decision_interval_sensitivity():
+    """Coarse decision intervals leave QoS violations unresolved longer
+    (paper Fig. 9): met-fraction degrades monotonically-ish with interval."""
+    svc = SERVICES["token-serve"]
+    fracs = {}
+    for interval in [0.5, 1.0, 8.0]:
+        job = _job("phi4-mini-3.8b")
+        res = simulate(svc, [job], horizon_s=360, interval_s=interval,
+                       seed=5)
+        fracs[interval] = res.qos_met_frac
+    assert fracs[0.5] >= fracs[8.0]
+    assert fracs[1.0] >= fracs[8.0]
+
+
+def test_interference_drops_with_approximation():
+    svc = SERVICES["token-serve"]
+    job = _job("phi4-mini-3.8b")
+    i_precise = interference_of([job], svc)
+    job.variant = len(job.table) - 1
+    i_approx = interference_of([job], svc)
+    assert i_approx < i_precise
+
+
+def test_chip_reclamation_helps_when_approx_insufficient():
+    svc = SERVICES["token-serve"]
+    base = svc.p99(0.775, 0.3, 0)
+    assert svc.p99(0.775, 0.3, 4) < base

@@ -1,0 +1,209 @@
+"""Pliant core: controller state machine (Fig. 3), round-robin arbiter
+fairness (§4.4), monitor, explorer Pareto properties — property-based where
+the invariant is over a space (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.controller import (Action, ControllerConfig, PliantController,
+                                   RoundRobinArbiter)
+from repro.core.explorer import (analytic_quality_loss, explore, knob_grid,
+                                 pareto_front)
+from repro.core.monitor import LatencyMonitor
+
+
+# ------------------------------------------------------------- controller --
+
+def test_fig3_transitions():
+    c = PliantController(n_variants=4,
+                         cfg=ControllerConfig(max_reclaim=2))
+    # violation from precise -> jump straight to most approximate
+    assert c.tick(True, -0.5) == Action.SET_MOST_APPROX
+    assert c.state.variant == 3
+    # still violating -> reclaim chips one per tick
+    assert c.tick(True, -0.2) == Action.RECLAIM_CHIPS
+    assert c.tick(True, -0.2) == Action.RECLAIM_CHIPS
+    assert c.state.reclaimed == 2
+    assert c.tick(True, -0.2) == Action.HOLD          # reclaim cap
+    # met with slack -> chips first, then variants, one per tick
+    assert c.tick(False, 0.3) == Action.RETURN_CHIPS
+    assert c.tick(False, 0.3) == Action.RETURN_CHIPS
+    assert c.tick(False, 0.3) == Action.STEP_PRECISE
+    assert c.state.variant == 2
+    # met without slack -> hold
+    assert c.tick(False, 0.05) == Action.HOLD
+    # violation while mid-range -> jump to most approximate again
+    assert c.tick(True, -0.1) == Action.SET_MOST_APPROX
+    assert c.state.variant == 3
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.floats(-1, 1, allow_nan=False)),
+                min_size=1, max_size=60),
+       st.integers(2, 8), st.integers(1, 6))
+def test_controller_invariants(ticks, n_variants, max_reclaim):
+    """State always in bounds; violations never decrease approximation."""
+    c = PliantController(n_variants,
+                         ControllerConfig(max_reclaim=max_reclaim))
+    for violated, slack in ticks:
+        before = (c.state.variant, c.state.reclaimed)
+        c.tick(violated, slack)
+        assert 0 <= c.state.variant < n_variants
+        assert 0 <= c.state.reclaimed <= max_reclaim
+        if violated:
+            assert c.state.variant >= before[0]
+            assert c.state.reclaimed >= before[1]
+        # at most one knob moves by at most one step (except the jump)
+        dv = abs(c.state.variant - before[0])
+        dr = abs(c.state.reclaimed - before[1])
+        assert dr <= 1
+        assert (dv == 0) or (dr == 0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 4), st.integers(0, 3))
+def test_round_robin_fairness(n_apps, n_variants, start):
+    """Under sustained violation, no app is penalized disproportionately:
+    max spread of (variant jumps, reclaimed chips) across apps <= 1 round."""
+    arb = RoundRobinArbiter([n_variants] * n_apps,
+                            ControllerConfig(max_reclaim=4), start=start)
+    for _ in range(n_apps * 10):
+        arb.tick(True, -0.5)
+    reclaimed = [s.reclaimed for s in arb.states]
+    assert max(reclaimed) - min(reclaimed) <= 1
+    assert all(s.variant == n_variants - 1 for s in arb.states)
+
+
+def test_round_robin_recovery_order():
+    arb = RoundRobinArbiter([3, 3], ControllerConfig(max_reclaim=2), start=0)
+    for _ in range(6):
+        arb.tick(True, -0.5)
+    # chips come back before variants step toward precise
+    acts = [arb.tick(False, 0.5)[0] for _ in range(4)]
+    assert acts[:2] == [Action.RETURN_CHIPS, Action.RETURN_CHIPS] or \
+        Action.RETURN_CHIPS in acts[:2]
+    assert all(a in (Action.RETURN_CHIPS, Action.STEP_PRECISE)
+               for a in acts)
+
+
+# ---------------------------------------------------------------- monitor --
+
+def test_monitor_p99_accuracy():
+    m = LatencyMonitor(qos_target_s=1.0, window=4096)
+    rng = np.random.default_rng(0)
+    lat = rng.lognormal(mean=0.0, sigma=0.3, size=4096)
+    for x in lat:
+        m.record(x)
+    true_p99 = float(np.percentile(lat, 99))
+    assert abs(m.p99() - true_p99) / true_p99 < 0.1
+    assert m.qos_violated() == (m.p99() > 1.0)
+
+
+def test_monitor_adaptive_rate():
+    m = LatencyMonitor(qos_target_s=10.0, window=512)
+    for x in np.full(512, 0.1):        # far below target
+        m.record(x)
+    low_rate = m.sample_rate
+    m2 = LatencyMonitor(qos_target_s=10.0, window=512)
+    for x in np.full(512, 9.9):        # at the boundary
+        m2.record(x)
+    assert m2.sample_rate == 1.0
+    assert low_rate < 1.0
+
+
+def test_monitor_slack_sign():
+    m = LatencyMonitor(qos_target_s=1.0)
+    for x in np.full(128, 2.0):
+        m.record(x)
+    assert m.slack() < 0
+    m.reset_window()
+    for x in np.full(128, 0.5):
+        m.record(x)
+    assert m.slack() > 0
+
+
+# --------------------------------------------------------------- explorer --
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1, allow_nan=False),
+                          st.floats(0.1, 2, allow_nan=False)),
+                min_size=1, max_size=40))
+def test_pareto_front_no_dominated(points):
+    front = pareto_front(points)
+    assert front, "front never empty"
+    chosen = [points[i] for i in front]
+    for q, t in chosen:
+        assert not any((q2 <= q and t2 < t) or (q2 < q and t2 <= t)
+                       for q2, t2 in points), "dominated point on front"
+    # sorted by quality loss, time strictly decreasing along the front
+    ts = [t for _, t in chosen]
+    assert all(ts[i] > ts[i + 1] for i in range(len(ts) - 1))
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "olmoe-1b-7b",
+                                  "mamba2-780m"])
+def test_explore_variant_table(arch):
+    cfg = get_config(arch)
+    table = explore(cfg, SHAPES["train_4k"], max_loss=0.05)
+    assert table.variants[0].knobs.is_precise()
+    assert all(v.quality_loss <= 0.05 for v in table.variants)
+    losses = [v.quality_loss for v in table.variants]
+    assert losses == sorted(losses)
+    times = [v.rel_time for v in table.variants]
+    assert all(times[i] >= times[i + 1] for i in range(len(times) - 1))
+    if cfg.moe is not None:
+        # with a collective-bound baseline (MoE all-to-all dominant, as the
+        # dry-run artifacts show) the top-k knob must reach the frontier
+        art = {"compute_s": 1.0, "memory_s": 0.8, "collective_s": 1.6}
+        t2 = explore(cfg, SHAPES["train_4k"], max_loss=0.05,
+                     baseline_art=art)
+        assert any(v.knobs.topk_override for v in t2.variants[1:]), \
+            "MoE arch should expose the top-k knob on its frontier"
+
+
+def test_knob_grid_family_aware():
+    ssm = get_config("mamba2-780m")
+    assert all(k.kv_keep_stride == 1 for k in knob_grid(ssm)), \
+        "attention-free arch must not get attention knobs"
+    dense = get_config("phi4-mini-3.8b")
+    assert all(k.topk_override == 0 for k in knob_grid(dense))
+    serving = knob_grid(dense, serving=True)
+    assert all(k.token_drop == 0 and k.sync_period == 1 for k in serving)
+
+
+def test_keep_groups_static():
+    assert keep_groups(8, 0.0) == tuple(range(8))
+    kept = keep_groups(8, 0.25)
+    assert len(kept) == 6 and kept[0] == 0 and kept[-1] == 7
+    assert keep_groups(8, 0.9) [0] == 0     # always >= 2 groups
+    assert len(keep_groups(8, 0.9)) >= 2
+
+
+def test_quality_model_monotone():
+    cfg = get_config("phi4-mini-3.8b")
+    assert analytic_quality_loss(cfg, PRECISE) == 0.0
+    a = analytic_quality_loss(cfg, ApproxKnobs(token_drop=0.25))
+    b = analytic_quality_loss(cfg, ApproxKnobs(token_drop=0.5))
+    assert 0 < a < b
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 64), st.floats(0, 0.95, allow_nan=False))
+def test_keep_groups_properties(n_groups, skip):
+    kept = keep_groups(n_groups, skip)
+    assert len(kept) >= min(2, n_groups)
+    assert kept == tuple(sorted(set(kept)))
+    assert kept[0] == 0 and kept[-1] == n_groups - 1 or n_groups == 1
+    assert all(0 <= i < n_groups for i in kept)
+
+
+def test_knobs_describe_roundtrip_distinct():
+    from repro.core.explorer import knob_grid
+    cfg = get_config("olmoe-1b-7b")
+    names = [k.describe() for k in knob_grid(cfg)]
+    assert len(names) == len(set(names)), "variant names must be unique"
+    assert "precise" in names

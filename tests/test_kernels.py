@@ -1,0 +1,141 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+executed in Pallas interpret mode (the kernel body runs on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 384),
+                                   (128, 1024, 256)])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_matches_ref(m, k, n, out_dtype):
+    kx = jax.random.PRNGKey(0)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    xq, xs = ref.quantize_rowwise(x)
+    wq, ws = ref.quantize_rowwise(w, axis=0)
+    got = int8_matmul(xq, xs, wq, ws, out_dtype=out_dtype, interpret=True,
+                      bk=256)
+    want = ref.int8_matmul_ref(xq, xs, wq, ws, out_dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_int8_quantized_matmul_accuracy():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    exact = x @ w
+    approx = ref.quantized_matmul_ref(x, w, jnp.float32)
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel          # W8A8 error well under 2%
+
+
+@pytest.mark.parametrize("kvh", [8, 2, 1])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False),
+    dict(causal=True, window=64), dict(causal=True, cap=30.0),
+    dict(causal=True, window=128, cap=50.0),
+])
+def test_flash_attention_matches_oracle(kvh, kwargs):
+    B, H, S, hd = 2, 8, 256, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, kvh, S, hd)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, kvh, S, hd))
+    got = flash_attention(q, k, v, interpret=True, bq=64, bk=64, **kwargs)
+    want = ref.mha_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, H, S, hd = 1, 4, 128, 64
+    q = (jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd)) * 0.3
+         ).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.PRNGKey(1), (B, H, S, hd)) * 0.3
+         ).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2),
+                          (B, H, S, hd)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, interpret=True, bq=64, bk=64)
+    want = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_kv_perforation_drops_blocks():
+    """With stride p, off-diagonal KV blocks are skipped -> result differs
+    from precise but matches a mask-equivalent oracle on kept blocks."""
+    B, H, S, hd = 1, 2, 512, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, hd)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, hd))
+    precise = flash_attention(q, k, v, interpret=True, bq=64, bk=64)
+    perf = flash_attention(q, k, v, interpret=True, bq=64, bk=64,
+                           kv_keep_stride=4)
+    # differs (approximation happened) but stays finite and bounded
+    assert float(jnp.max(jnp.abs(perf - precise))) > 1e-6
+    assert bool(jnp.all(jnp.isfinite(perf)))
+    # early rows (diagonal-only) are identical
+    np.testing.assert_allclose(np.asarray(perf[:, :, :128]),
+                               np.asarray(precise[:, :, :128]), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 2, 16, 8), (2, 128, 3, 32, 16),
+                                   (1, 256, 4, 64, 32)])
+def test_ssd_scan_matches_naive(shape):
+    B, S, H, P, N = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    a = -jnp.exp(jax.random.uniform(jax.random.PRNGKey(2), (H,)))
+    b = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    c = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    want = ref.ssd_ref(x, dt, a, b, c)
+    chunk = min(32, S)
+    got_k = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    got_c = ref.ssd_chunked_ref(x, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_with_d_skip():
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    a = -jnp.exp(jax.random.uniform(jax.random.PRNGKey(2), (H,)))
+    b = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    c = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    d = jnp.ones((H,))
+    want = ref.ssd_ref(x, dt, a, b, c, d_skip=d)
+    got = ref.ssd_chunked_ref(x, dt, a, b, c, chunk=16, d_skip=d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_bf16_inputs_close():
+    """Production dtype path: bf16 operands with fp32 state/accumulators
+    (EXPERIMENTS.md P9) stays within bf16-appropriate tolerance of the fp32
+    naive recurrence."""
+    B, S, H, P, N = 2, 128, 3, 32, 16
+    x = (jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P)) * 0.5
+         ).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    a = -jnp.exp(jax.random.uniform(jax.random.PRNGKey(2), (H,)))
+    b = (jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+         ).astype(jnp.bfloat16)
+    c = (jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+         ).astype(jnp.bfloat16)
+    want = ref.ssd_ref(x.astype(jnp.float32), dt, a, b.astype(jnp.float32),
+                       c.astype(jnp.float32))
+    got = ref.ssd_chunked_ref(x, dt, a, b, c, chunk=32)
+    rel = float(jnp.linalg.norm(got.astype(jnp.float32) - want)
+                / jnp.linalg.norm(want))
+    assert rel < 0.05, rel

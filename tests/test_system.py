@@ -1,0 +1,63 @@
+"""End-to-end behaviour: real training converges; the Pliant runtime switches
+variants under contention without breaking convergence; quality loss of
+approximate training is real but bounded (the paper's core trade-off)."""
+import numpy as np
+import pytest
+
+from repro.launch import train as train_mod
+
+
+def test_training_converges():
+    loss = train_mod.main(["--arch", "phi4-mini-3.8b-smoke", "--steps", "40",
+                           "--batch", "8", "--seq", "64", "--lr", "3e-3"])
+    assert np.isfinite(loss)
+    # random init sits at ~5.64 on this stream; the Markov/copy structure is
+    # learnable down to ~5.4 at this scale — require clear movement
+    assert loss < 5.52, loss
+
+
+def test_pliant_training_converges_and_acts():
+    import io, contextlib
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        loss = train_mod.main(["--arch", "phi4-mini-3.8b-smoke", "--steps",
+                               "40", "--batch", "8", "--seq", "64", "--lr",
+                               "3e-3", "--pliant",
+                               "--decision-interval", "0.2"])
+    out = buf.getvalue()
+    assert np.isfinite(loss) and loss < 5.55
+    assert "set_most_approx" in out        # contention burst triggered Pliant
+    assert "pliant actions" in out
+
+
+def test_approximation_quality_loss_bounded():
+    """Train precise vs heavy-approximation for the same steps: approximate
+    loss is worse (it IS an approximation) but within a few percent."""
+    import jax, jax.numpy as jnp
+    from repro.approx.knobs import ApproxKnobs
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import api
+    from repro.train import optim, step as step_mod
+
+    cfg = get_config("mamba2-780m-smoke")
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 8, seed=0))
+    results = {}
+    for name, knobs in [("precise", ApproxKnobs()),
+                        ("approx", ApproxKnobs(matmul_precision="int8",
+                                               token_drop=0.25))]:
+        params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+        opt = optim.init_opt(params)
+        step = jax.jit(step_mod.make_train_step(
+            cfg, knobs, opt_cfg=optim.OptConfig(lr=3e-3, warmup=5,
+                                                total_steps=60),
+            remat="none"))
+        losses = []
+        for i in range(60):
+            batch = {"tokens": jnp.asarray(data.batch(i))}
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        results[name] = np.mean(losses[-10:])
+    qloss = (results["approx"] - results["precise"]) / results["precise"]
+    assert results["approx"] < results["precise"] * 1.10, results
+    assert np.isfinite(qloss)
