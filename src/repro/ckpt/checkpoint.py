@@ -32,6 +32,21 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _mesh_of(leaves) -> Optional[Dict]:
+    """Source mesh metadata (shape + axis names) if the tree is sharded.
+
+    Restore never *requires* it — arrays are saved unsharded-logical and
+    re-``device_put`` with the target shardings — but the manifest records the
+    save-side topology so elastic (2,4)->(4,2)/(1,8) restores are auditable.
+    """
+    for x in leaves:
+        sh = getattr(x, "sharding", None)
+        mesh = getattr(sh, "mesh", None)
+        if mesh is not None and getattr(mesh, "shape", None):
+            return {"shape": {str(k): int(v) for k, v in mesh.shape.items()}}
+    return None
+
+
 def save(path: str, tree, step: int, *, extra: Optional[Dict] = None) -> None:
     """Atomic (write-then-rename) checkpoint save."""
     path = pathlib.Path(path)
@@ -47,6 +62,7 @@ def save(path: str, tree, step: int, *, extra: Optional[Dict] = None) -> None:
         "treedef": str(treedef),
         "dtypes": [str(x.dtype) for x in arrays.values()],
         "shapes": [list(x.shape) for x in arrays.values()],
+        "mesh": _mesh_of(leaves),
         "time": time.time(),
         "extra": extra or {},
     }

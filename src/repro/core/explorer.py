@@ -41,23 +41,31 @@ def knob_grid(cfg: ModelConfig, *, serving: bool = False) -> List[ApproxKnobs]:
         topks = [0] + sorted({max(1, t // 2), max(1, 3 * t // 4),
                               max(1, t // 4)})
     syncs = [1, 2, 4] if not serving else [1]
+    compresses = ["none", "int8"] if not serving else ["none"]
     cands = []
-    for p, d, s, st, tk, sy in itertools.product(
-            precisions, drops, skips, strides, topks, syncs):
+    for p, d, s, st, tk, sy, gc in itertools.product(
+            precisions, drops, skips, strides, topks, syncs, compresses):
         if serving and (d or s):      # no token/layer drop for serving jobs
+            continue
+        if gc != "none" and sy > 1:
+            # sync elision already removes the per-step pod reduce that
+            # compression would shrink (train/step.grad_reduce_for); the
+            # combination executes identically to sync-only, so don't
+            # enumerate it as a distinct variant
             continue
         # at most two techniques per variant — the paper's variants perforate
         # one loop / lower one type at a time (Fig. 1 spaces), not the full
         # cross-product; this also keeps top-end quality loss near the
         # measured 2-3% band instead of saturating the 5% cap
-        active = sum([p != "bf16", d > 0, s > 0, st > 1, tk > 0, sy > 1])
+        active = sum([p != "bf16", d > 0, s > 0, st > 1, tk > 0, sy > 1,
+                      gc != "none"])
         if active > 2:
             continue
         kv_quant = serving and p == "int8"
         cands.append(ApproxKnobs(matmul_precision=p, token_drop=d,
                                  layer_skip=s, kv_keep_stride=st,
                                  topk_override=tk, sync_period=sy,
-                                 kv_quant=kv_quant))
+                                 grad_compress=gc, kv_quant=kv_quant))
     # dedupe, precise first
     seen, out = set(), []
     for k in [PRECISE] + cands:
@@ -81,6 +89,7 @@ _QUALITY = {
     "kv_stride": 0.008,        # x (1 - 1/stride)
     "topk": 0.022,             # x (1 - k/k0)
     "sync": 0.012,             # x (1 - 1/period)
+    "grad_compress": 0.004,    # int8 gradient wire noise, consumed per step
     "kv_quant": 0.003,
 }
 
@@ -97,6 +106,10 @@ def analytic_quality_loss(cfg: ModelConfig, k: ApproxKnobs) -> float:
         q += _QUALITY["topk"] * (1 - k.topk_override / cfg.moe.top_k)
     if k.sync_period > 1:
         q += _QUALITY["sync"] * (1 - 1.0 / k.sync_period)
+    if k.grad_compress != "none" and k.sync_period == 1:
+        # under sync elision the per-step compressed reduce never runs
+        # (train/step.grad_reduce_for), so its noise contributes nothing
+        q += _QUALITY["grad_compress"]
     if k.kv_quant:
         q += _QUALITY["kv_quant"]
     return q
@@ -139,8 +152,10 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
         f_flops *= (1 - moe_share) + moe_share * r
         f_coll *= (1 - moe_share) + moe_share * r
     if k.sync_period > 1:
+        # the periodic pod sync is always full-precision (train/step.pod_sync
+        # never re-rounds parameters), so compression contributes nothing here
         f_coll *= 1.0 / k.sync_period
-    if k.grad_compress == "int8":
+    elif k.grad_compress == "int8":
         f_coll *= 0.3
     if k.kv_quant:
         f_mem *= 0.7

@@ -1,0 +1,84 @@
+"""Shims for jax API drift.
+
+The codebase (and ``tests/test_dist.py``) is written against the current jax
+surface — ``jax.set_mesh`` as a context manager, ``jax.shard_map`` with
+``axis_names``/``check_vma`` keywords — but the pinned CPU environment runs
+jax 0.4.37, where those live under older names:
+
+* ``jax.shard_map``  -> ``jax.experimental.shard_map.shard_map`` with
+  ``check_rep`` instead of ``check_vma`` and no ``axis_names`` keyword (the
+  legacy call is fully manual over every mesh axis, which subsumes the
+  ``axis_names`` subsets used here since unnamed axes only ever carry
+  replicated values under ``check_vma=False``).
+* ``jax.set_mesh``   -> entering the legacy ``Mesh`` context manager.
+
+``install()`` backfills the modern names onto the ``jax`` namespace; importing
+``repro.dist`` (or ``repro.launch.mesh``) triggers it, so any entrypoint that
+builds a mesh can rely on the modern API.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _legacy_shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=None, check_rep=None):
+    """Modern ``jax.shard_map`` signature lowered to the 0.4.x API."""
+    from jax.experimental.shard_map import shard_map as _sm
+    del axis_names  # fully-manual over every mesh axis (see module docstring)
+    if check_rep is None:
+        check_rep = True if check_vma is None else bool(check_vma)
+    if f is None:                       # used as a decorator factory
+        return lambda fn: _legacy_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                            out_specs=out_specs,
+                                            check_rep=check_rep)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)
+
+
+def _legacy_set_mesh(mesh):
+    """On 0.4.x a concrete ``Mesh`` is itself the context manager."""
+    return mesh
+
+
+def shard_map(*args, **kwargs):
+    """Dispatch to the native ``jax.shard_map`` when present, else the shim."""
+    native = getattr(jax, "shard_map", None)
+    if native is not None and native is not _legacy_shard_map:
+        return native(*args, **kwargs)
+    return _legacy_shard_map(*args, **kwargs)
+
+
+def set_mesh(mesh):
+    native = getattr(jax, "set_mesh", None)
+    if native is not None and native is not _legacy_set_mesh:
+        return native(mesh)
+    return _legacy_set_mesh(mesh)
+
+
+def active_mesh():
+    """The mesh of the enclosing ``set_mesh`` context, or None.
+
+    Annotation helpers use this to become no-ops when tracing single-device
+    programs (the reference paths in tests).
+    """
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:  # pragma: no cover - future jax moves the internals
+        pass
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:  # pragma: no cover - modern jax path
+        m = get_abstract()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+    return None
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _legacy_shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _legacy_set_mesh

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding policies.
+
+Every module in ``models/`` declares its parameters as ``ParamSpec`` trees
+with *logical* axis names (``embed``, ``mlp``, ``q_heads``, ``expert``, ...).
+This module maps those names onto mesh axes under a named policy and returns
+``NamedSharding`` trees with the exact same pytree structure as the params —
+so ``jax.device_put(params, param_shardings(...))`` and
+``jax.jit(..., in_shardings=...)`` work directly.
+
+Policies:
+
+* ``"replicated"`` — everything everywhere (CPU smoke fallback).
+* ``"tp"``         — megatron-style tensor parallelism over ``model``:
+                     hidden/expert/vocab dims sharded, embed dim replicated.
+* ``"fsdp_tp"``    — ``tp`` plus the embed dim FSDP-sharded over ``data``.
+
+A dim is only sharded when its size divides the mesh axis; each mesh axis is
+used at most once per array (first matching dim wins), so e.g. MoE expert
+weights shard experts over ``model`` and leave ``mlp`` replicated rather than
+double-booking the axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import ParamSpec, spec_tree_map
+
+# logical axis name -> mesh axis, per policy. Axes not listed stay replicated.
+_TP_RULES = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+}
+
+POLICIES = {
+    "replicated": {},
+    "tp": dict(_TP_RULES),
+    "fsdp_tp": dict(_TP_RULES, embed="data"),
+}
+
+
+def default_policy(cfg: ModelConfig) -> str:
+    """Weights at production scale never fit replicated: FSDP+TP everywhere."""
+    return "fsdp_tp"
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    flat = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in flat:
+        n *= mesh.shape[a]
+    return n
+
+
+def _axes_present(mesh, axes) -> bool:
+    flat = axes if isinstance(axes, tuple) else (axes,)
+    return all(a in mesh.shape for a in flat)
+
+
+def _spec_for(spec: ParamSpec, rules, mesh) -> P:
+    used = set()
+    out = []
+    for size, name in zip(spec.shape, spec.axes):
+        ax = rules.get(name)
+        if (ax is None or ax not in mesh.shape or ax in used
+                or size % mesh.shape[ax] != 0):
+            out.append(None)
+        else:
+            out.append(ax)
+            used.add(ax)
+    return P(*out)
+
+
+def param_shardings(cfg: ModelConfig, mesh, mode: Optional[str] = None):
+    """NamedSharding tree matching the param tree of ``cfg``'s family."""
+    from repro.models import api
+    rules = POLICIES[mode or default_policy(cfg)]
+    return spec_tree_map(
+        lambda s: NamedSharding(mesh, _spec_for(s, rules, mesh)),
+        api.model_specs(cfg))
+
+
+# ----------------------------------------------------------------- inputs --
+
+def batch_pspec(global_batch: int, mesh) -> P:
+    """PartitionSpec for the batch dim: greedily shard over (pod, data)."""
+    use, n = [], 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and global_batch % (n * mesh.shape[a]) == 0:
+            use.append(a)
+            n *= mesh.shape[a]
+    if not use:
+        return P()
+    return P(tuple(use) if len(use) > 1 else use[0])
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Shardings matching ``api.input_specs(cfg, shape)`` key-for-key."""
+    from repro.models import api
+    bspec = batch_pspec(shape.global_batch, mesh)
+    b = bspec[0] if len(bspec) else None
+    return {
+        name: NamedSharding(mesh, P(b, *([None] * (len(s.shape) - 1))))
+        for name, s in api.input_specs(cfg, shape).items()
+    }
+
+
+# ----------------------------------------------------------------- caches --
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                    seq_axis: str = "model", quantized: bool = False):
+    """(sharding tree, abstract caches) for sequence-sharded decode.
+
+    KV caches shard the cache-length dim over ``seq_axis`` (GSPMD lowers the
+    attention softmax over it to partial reductions) and the batch dim over
+    the batch axes. Mamba states have no sequence dim; they shard batch only.
+    Returns trees with the exact structure of ``models.*.init_caches``.
+    """
+    from repro.models import api
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import MambaCache
+    caches_abs = api.abstract_caches(cfg, shape.global_batch, shape.seq_len,
+                                     quantized=quantized)
+    bspec = batch_pspec(shape.global_batch, mesh)
+    b = bspec[0] if len(bspec) else None
+
+    def batch_ax(n):
+        return b if (b is not None and n % _axis_size(mesh, b) == 0) else None
+
+    def seq_ax(n):
+        ok = (seq_axis in mesh.shape and n % mesh.shape[seq_axis] == 0)
+        return seq_axis if ok else None
+
+    def one(c):
+        # leaves are group-stacked: dim 0 = layer groups (scan carried)
+        if isinstance(c, KVCache):
+            bb, ss = batch_ax(c.k.shape[1]), seq_ax(c.k.shape[2])
+            kv = NamedSharding(mesh, P(None, bb, ss, None, None))
+            return KVCache(
+                k=kv, v=kv,
+                pos=NamedSharding(mesh, P(None, bb, ss)),
+                cursor=NamedSharding(mesh, P(None)))
+        assert isinstance(c, MambaCache), type(c)
+        return jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(None, batch_ax(x.shape[1]), *([None] * (x.ndim - 2)))),
+            c)
+
+    sh = jax.tree.map(one, caches_abs,
+                      is_leaf=lambda x: isinstance(x, (KVCache, MambaCache)))
+    return sh, caches_abs

@@ -16,8 +16,11 @@ with known static trip counts. Nested loops compose (see launch/dryrun.py).
 compile on a small cell.
 
 Loop sites: "groups" (layer-group scan, fwd/bwd/decode), "enc" (encoder
-stack), "ce" (chunked cross-entropy), "ssd" (SSD chunk-state scan),
-"micro" (gradient-accumulation scan).
+stack), "ce" (chunked cross-entropy), "micro" (gradient-accumulation scan).
+("ssd" is retained for compatibility but unused: the SSD chunk-state
+recurrence is a static python loop, so its bodies are counted exactly in the
+base compile — a while loop there made the 2-point probe measure loop-shuttle
+fusion noise instead of body cost.)
 """
 UNROLL = {"groups": 1, "enc": 1, "ce": 1, "ssd": 1, "micro": 1}
 

@@ -1,0 +1,11 @@
+"""Pallas API drift shim.
+
+jax renamed ``jax.experimental.pallas.tpu.TPUCompilerParams`` to
+``CompilerParams`` (and back-dated deprecation): the pinned jax 0.4.37 only
+has the old name, current jax only the new one. Every kernel imports the
+class from here so the rename is absorbed in one place.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

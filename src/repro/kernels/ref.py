@@ -139,18 +139,20 @@ def ssd_chunked_ref(x, dt, a, b, c, *, chunk=64, d_skip=None,
                       (xf * wi[..., None]).astype(cdt), bf.astype(cdt),
                       preferred_element_type=jnp.float32)
 
-    def scan_states(s_prev, inp):
-        s_in_c, tot_c = inp                          # (B,H,P,N), (B,H)
-        s_new = s_prev * jnp.exp(tot_c)[..., None, None] + s_in_c
-        return s_new, s_prev                         # emit state *entering* c
-
-    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
-    from repro import flags
-    s_final, s_enter = jax.lax.scan(
-        scan_states, s0,
-        (s_in.transpose(1, 0, 2, 3, 4),
-         total[:, :, 0, :].transpose(1, 0, 2)), unroll=flags.unroll("ssd"))
-    s_enter = s_enter.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+    # chunk-state recurrence as a STATIC python loop (nc is static, the body
+    # is a few elementwise ops): a lax.scan here made the dry-run accounting
+    # lie — XLA counts a while body once regardless of trips, and the body is
+    # so small that the 2-point unroll probe measured loop-shuttle fusion
+    # noise (a NEGATIVE byte marginal) instead of body cost. Fully static,
+    # every chunk body is counted exactly in the base compile.
+    decay = jnp.exp(total[:, :, 0, :])               # (B,nc,H)
+    s = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    enters = []
+    for ci in range(nc):
+        enters.append(s)
+        s = s * decay[:, ci, :, None, None] + s_in[:, ci]
+    s_final = s
+    s_enter = jnp.stack(enters, axis=1)              # (B,nc,H,P,N)
     y_state = jnp.einsum("bcqn,bchpn->bcqhp", cf.astype(cdt),
                          s_enter.astype(cdt),
                          preferred_element_type=jnp.float32) \

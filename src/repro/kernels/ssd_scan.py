@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, q: int):
     ci = pl.program_id(2)
@@ -83,7 +85,7 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False):
         out_specs=pl.BlockSpec((1, 1, Q, P), lambda i, h, ci: (i, h, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xh, dth, a.astype(jnp.float32), b, c)

@@ -38,6 +38,7 @@ VARIANTS = {
     "kvstride2": ApproxKnobs(kv_keep_stride=2),
     "topk_half": None,     # resolved per-arch below
     "int8_kvq": ApproxKnobs(matmul_precision="int8", kv_quant=True),
+    "gint8": ApproxKnobs(grad_compress="int8"),   # int8-wire pod grad reduce
 }
 
 
@@ -71,7 +72,8 @@ def lower_cell(cfg, shape, mesh, knobs, *, policy=None, n_micro=1,
             m=jax.tree.map(lambda s: s, params_sh),
             v=jax.tree.map(lambda s: s, params_sh))
         fn = step_mod.make_train_step(cfg, knobs, n_micro=n_micro,
-                                      remat=remat, ep_axis=ep_axis, mesh=mesh)
+                                      remat=remat, ep_axis=ep_axis, mesh=mesh,
+                                      param_pspecs=params_sh)
         jitted = jax.jit(fn,
                          in_shardings=(params_sh, opt_sh, in_sh),
                          out_shardings=(params_sh, opt_sh, None),
@@ -138,10 +140,8 @@ def loop_trips(cfg, shape, knobs, n_micro: int, remat: str):
         nc_ce = s_text // ce_chunk(s_text)
         if nc_ce > 1:
             mult["ce"] = mic * (nc_ce - 1)
-    if cfg.ssm is not None and shape.kind != "decode":
-        nc_ssd = max(1, shape.seq_len // cfg.ssm.chunk)
-        if nc_ssd > 1:
-            mult["ssd"] = mic * g * (nc_ssd - 1)
+    # (no "ssd" site: the SSD chunk-state recurrence is a static python loop
+    # in kernels/ref.py — every chunk body is already in the base compile)
     if cfg.family == "encdec" and shape.kind != "decode":
         if cfg.n_encoder_layers > 1:
             mult["enc"] = mic * (cfg.n_encoder_layers - 1)
@@ -156,6 +156,8 @@ def _compile_and_measure(cfg, shape, mesh, knobs, *, policy, n_micro, remat):
     compiled = lowered.compile()
     t2 = time.time()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<=0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = roofline.collective_bytes(compiled.as_text())
     return {
@@ -178,6 +180,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
         return {"skipped": reason, "arch": arch, "shape": shape_name}
     knobs = resolve_variant(variant, cfg)
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    if knobs.grad_compress != "none" and "pod" not in mesh.shape:
+        # without a pod axis the compressed reduce is a no-op and the cell
+        # would silently measure identically to precise under a gint8 label
+        reason = "grad_compress needs a pod axis (--mesh multipod)"
+        print(f"SKIP {arch} x {shape_name} x {variant}: {reason}")
+        return {"skipped": reason, "arch": arch, "shape": shape_name}
     n_chips = mesh.size
 
     flags.reset_unroll()

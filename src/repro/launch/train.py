@@ -34,10 +34,11 @@ from repro.models import api
 from repro.train import optim, step as step_mod
 
 
-def build_variant_steps(cfg, table: VariantTable, opt_cfg, remat="none"):
+def build_variant_steps(cfg, table: VariantTable, opt_cfg, remat="none",
+                        mesh=None):
     def factory(knobs: ApproxKnobs):
         fn = step_mod.make_train_step(cfg, knobs, opt_cfg=opt_cfg,
-                                      remat=remat)
+                                      remat=remat, mesh=mesh)
         return jax.jit(fn, donate_argnums=(0, 1))
     table.compile_all(factory)
 
@@ -56,6 +57,11 @@ def main(argv=None):
     p.add_argument("--ckpt-period", type=int, default=50)
     p.add_argument("--resume", action="store_true")
     p.add_argument("--decision-interval", type=float, default=0.5)
+    p.add_argument("--pod-mesh", action="store_true",
+                   help="lay local devices out as a (pod, data) mesh so the "
+                        "sync_period/grad_compress knobs exercise the real "
+                        "cross-pod collectives (needs >=2 devices, e.g. "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -65,9 +71,20 @@ def main(argv=None):
     opt = optim.init_opt(params)
     opt_cfg = optim.OptConfig(lr=args.lr, warmup=20, total_steps=args.steps)
 
+    mesh = None
+    if args.pod_mesh:
+        if jax.device_count() >= 2:
+            from repro.launch.mesh import make_mesh
+            n = jax.device_count()
+            mesh = make_mesh((2, n // 2), ("pod", "data"))
+        else:
+            print("WARNING: --pod-mesh ignored (1 device; set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N) — pod "
+                  "collectives will be no-ops")
+
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     table = explore(cfg, shape, serving=False, max_variants=4)
-    build_variant_steps(cfg, table, opt_cfg)
+    build_variant_steps(cfg, table, opt_cfg, mesh=mesh)
 
     monitor = LatencyMonitor(SERVICES["token-serve"].qos_target_s)
     runtime = PliantRuntime(table, monitor)
@@ -106,6 +123,13 @@ def main(argv=None):
             else table.executable(0)
         params, opt, metrics = step_fn(params, opt, batch)
         losses.append(float(metrics["loss"]))
+        active_knobs = table.variants[runtime.active_variant].knobs \
+            if args.pliant else PRECISE
+        if active_knobs.sync_period > 1 \
+                and (i + 1) % active_knobs.sync_period == 0:
+            # sync-elision knob: the step carries no cross-pod collectives;
+            # the driver syncs params every k steps (no-op without a pod axis)
+            params = step_mod.pod_sync(params, mesh)
         if args.pliant:
             # synthetic contention trace: mid-run interference burst on the
             # colocated interactive service

@@ -13,6 +13,7 @@ from repro.models.blocks import block_decode, block_forward, block_specs
 from repro.models.lm import (chunked_xent, init_caches, logits_fn)
 from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
 from repro.models.lm import _slice_groups
+from repro.dist.annotate import constrain_batch
 
 
 def encdec_specs(cfg: ModelConfig):
@@ -30,7 +31,6 @@ def encdec_specs(cfg: ModelConfig):
 def encode(params, frames, cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
            *, remat: str = "full"):
     """frames: (B, F, D) stub embeddings -> (B, F, D) memory."""
-    from repro.dist.annotate import constrain_batch
     h = constrain_batch(frames.astype(params["enc_norm"].dtype))
     B, F, D = h.shape
     positions = jnp.broadcast_to(jnp.arange(F), (B, F))
@@ -49,7 +49,6 @@ def encode(params, frames, cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
 
 def decode_hidden(params, tokens, enc_out, cfg: ModelConfig,
                   knobs: ApproxKnobs = PRECISE, *, remat: str = "full"):
-    from repro.dist.annotate import constrain_batch
     h = constrain_batch(params["embed"][tokens])
     B, S, D = h.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))

@@ -24,6 +24,7 @@ from repro.models import attention as attn_mod
 from repro.models import mamba2 as mamba_mod
 from repro.models.blocks import block_decode, block_forward, block_specs
 from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
+from repro.dist.annotate import constrain_batch, constrain_vocab
 
 
 # ------------------------------------------------------------------ specs --
@@ -69,7 +70,6 @@ def forward_hidden(params, tokens, cfg: ModelConfig,
 
     ``prefix_embeds``: (B, P, D) stub modality embeddings prepended (vlm).
     """
-    from repro.dist.annotate import constrain_batch
     h = params["embed"][tokens]
     if prefix_embeds is not None:
         h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
@@ -158,7 +158,6 @@ def chunked_xent(params, h, labels, mask, cfg: ModelConfig, *,
     B, S, D = h.shape
     C = ce_chunk(S, chunk)
     nc = S // C
-    from repro.dist.annotate import constrain_batch, constrain_vocab
     emb = _unembed(params, cfg)
     h = constrain_batch(h)
     hs = h.reshape(B, nc, C, D).transpose(1, 0, 2, 3)

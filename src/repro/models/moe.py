@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.common import ParamSpec
 from repro.kernels import ops as kops
+from repro.dist import annotate
 
 
 def moe_specs(cfg: ModelConfig):
@@ -126,7 +127,6 @@ def moe(params, x, cfg: ModelConfig, *, top_k: int = 0,
         return y.reshape(B, S, D), aux
 
     from jax.sharding import PartitionSpec as P
-    from repro.dist import annotate
     T = B * S
     all_axes = tuple(mesh.shape.keys())
     n_all = int(np.prod(list(mesh.shape.values())))

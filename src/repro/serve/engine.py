@@ -8,6 +8,7 @@ runs — switched between steps exactly like training variants.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -28,6 +29,7 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    cursor: int = 0       # next prompt token to feed (cache-warmup progress)
 
 
 @dataclass
@@ -72,13 +74,12 @@ class ServeEngine:
                 self.slots[i] = req
                 self._reset_slot_cache(i)
                 # prompt tokens are fed through decode steps (cache warmup)
-                req._cursor = 0          # type: ignore[attr-defined]
+                req.cursor = 0
                 self.positions[i] = 0
                 self.cur_tokens[i] = req.prompt[0]
 
     def step(self) -> None:
         """One engine step: decode one token for every active slot."""
-        import time
         self._fill_slots()
         if all(s is None for s in self.slots):
             return
@@ -92,12 +93,11 @@ class ServeEngine:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            cur = req._cursor                   # type: ignore[attr-defined]
             self.positions[i] += 1
-            if cur + 1 < len(req.prompt):
+            if req.cursor + 1 < len(req.prompt):
                 # still consuming the prompt
-                req._cursor = cur + 1           # type: ignore[attr-defined]
-                self.cur_tokens[i] = req.prompt[cur + 1]
+                req.cursor += 1
+                self.cur_tokens[i] = req.prompt[req.cursor]
                 continue
             nxt = int(np.argmax(logits[i]))
             req.out.append(nxt)

@@ -3,11 +3,16 @@
 Pure-jnp (no optax in this environment). Moment tensors inherit the param
 shardings (passed through ``jax.tree.map`` structurally), so optimizer state
 is FSDP/TP-sharded exactly like the weights.
+
+``adamw_update`` takes an optional ``grad_reduce`` hook applied to the raw
+gradients before clipping — the seam where ``repro.dist.collectives`` plugs in
+the int8-compressed cross-pod reduction (the ``grad_compress`` knob) without
+the optimizer knowing about meshes.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +55,15 @@ def global_norm(tree):
                         for x in jax.tree.leaves(tree)))
 
 
-def adamw_update(grads, opt: OptState, params, cfg: OptConfig):
-    """Returns (new_params, new_opt, metrics)."""
+def adamw_update(grads, opt: OptState, params, cfg: OptConfig, *,
+                 grad_reduce: Optional[Callable] = None):
+    """Returns (new_params, new_opt, metrics).
+
+    ``grad_reduce``: optional tree -> tree collective (e.g. compressed
+    cross-pod mean) applied before clipping/moment updates.
+    """
+    if grad_reduce is not None:
+        grads = grad_reduce(grads)
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
     step = opt.step + 1

@@ -19,7 +19,50 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import api
 from repro.approx.knobs import ApproxKnobs, PRECISE
+from repro.dist import collectives
 from repro.train import optim
+
+
+def grad_reduce_for(knobs: ApproxKnobs, mesh, pspecs=None):
+    """The cross-pod gradient collective an (knobs, mesh) pair calls for.
+
+    * no pod axis / single device  -> None (GSPMD's implicit reduction only)
+    * ``sync_period > 1``          -> None: per-step pod sync is ELIDED; the
+      launcher runs ``pod_sync`` every k steps instead (local-SGD style).
+    * ``grad_compress == "int8"``  -> int8-wire compressed pod mean each step.
+    """
+    if mesh is None or "pod" not in getattr(mesh, "shape", {}):
+        return None
+    if knobs.sync_period > 1 or knobs.grad_compress != "int8":
+        return None
+    return lambda g: collectives.pod_sync_params(g, mesh, compress=True,
+                                                 pspecs=pspecs)
+
+
+_POD_SYNC_CACHE = {}
+
+
+def pod_sync(params, mesh, pspecs=None):
+    """Periodic pod-level param sync (the ``sync_period`` knob). No-op
+    without a pod axis, so launchers call it unconditionally every k steps.
+
+    Always full-precision wire: int8-compressing the *parameters* would
+    re-round model state to 8-bit resolution every sync (unlike gradients,
+    where the quantization noise is consumed once and scaled by lr) —
+    ``grad_compress`` only shapes the per-step gradient path. The jitted sync
+    is cached per (mesh, tree structure) so the train hot loop never
+    re-traces it.
+    """
+    if mesh is None or "pod" not in getattr(mesh, "shape", {}):
+        return params
+    if pspecs is not None:      # rare, launcher-specific: don't cache
+        return collectives.pod_sync_params(params, mesh, pspecs=pspecs)
+    key = (mesh, jax.tree.structure(params))
+    fn = _POD_SYNC_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda p: collectives.pod_sync_params(p, mesh))
+        _POD_SYNC_CACHE[key] = fn
+    return fn(params)
 
 
 def _micro_split(batch, n_micro: int):
@@ -34,9 +77,10 @@ def make_train_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                     opt_cfg: optim.OptConfig = optim.OptConfig(),
                     n_micro: int = 1, remat: str = "full",
                     ep_axis: Optional[str] = None, mesh=None,
-                    donate: bool = True):
+                    donate: bool = True, param_pspecs=None):
     """Returns step(params, opt, batch) -> (params, opt, metrics)."""
     loss_fn = api.loss_fn(cfg)
+    grad_reduce = grad_reduce_for(knobs, mesh, param_pspecs)
 
     def loss_of(params, micro_batch):
         loss, metrics = loss_fn(params, micro_batch, knobs=knobs,
@@ -68,7 +112,8 @@ def make_train_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
             loss = lsum / n_micro
             metrics = jax.tree.map(lambda m: m[-1], metrics)
         params, opt, opt_metrics = optim.adamw_update(grads, opt, params,
-                                                      opt_cfg)
+                                                      opt_cfg,
+                                                      grad_reduce=grad_reduce)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         return params, opt, metrics
 

@@ -1,0 +1,35 @@
+"""Use hypothesis when installed; otherwise degrade gracefully.
+
+The container image this repo pins cannot reach PyPI, so ``hypothesis`` (a
+dev-extra, see requirements-dev.txt) may be absent. Importing this module
+instead of ``hypothesis`` directly keeps ``test_core.py``/``test_substrate.py``
+collectable either way: with hypothesis the property tests run for real;
+without it only those tests are skipped — the rest of the module still runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Opaque stand-in: builds on attribute access / call so strategy
+        expressions like ``st.integers(1, 4).map(f)`` evaluate at collection
+        time; the decorated test never runs (it is marked skipped)."""
+
+        def __call__(self, *args, **kwargs):
+            return _Strategy()
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(see requirements-dev.txt)")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

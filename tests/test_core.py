@@ -3,7 +3,7 @@ fairness (§4.4), monitor, explorer Pareto properties — property-based where
 the invariant is over a space (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.approx.knobs import ApproxKnobs, PRECISE, keep_groups
 from repro.configs import get_config

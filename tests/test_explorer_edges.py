@@ -1,0 +1,66 @@
+"""Pure-python edge cases for ``explorer.pareto_front`` and
+``knobs.keep_groups`` — degenerate inputs the property/grid tests never hit."""
+import pytest
+
+from repro.approx.knobs import keep_groups
+from repro.core.explorer import pareto_front
+
+
+# ------------------------------------------------------------ pareto_front --
+
+def test_pareto_front_duplicate_points_kept_once():
+    pts = [(0.1, 1.0), (0.1, 1.0), (0.1, 1.0)]
+    front = pareto_front(pts)
+    assert len(front) == 1
+    assert pts[front[0]] == (0.1, 1.0)
+
+
+def test_pareto_front_all_dominated_by_one():
+    # index 2 dominates every other point on both axes
+    pts = [(0.5, 3.0), (0.4, 2.0), (0.0, 1.0), (0.9, 5.0)]
+    assert pareto_front(pts) == [2]
+
+
+def test_pareto_front_empty_and_singleton():
+    assert pareto_front([]) == []
+    assert pareto_front([(0.3, 2.0)]) == [0]
+
+
+def test_pareto_front_strict_frontier_sorted_by_quality_loss():
+    # a real frontier: quality loss up, time down; dominated stragglers out
+    pts = [(0.0, 5.0), (0.1, 3.0), (0.2, 4.0),   # (0.2, 4.0) dominated
+           (0.3, 1.0), (0.3, 2.0)]               # tie on loss: faster wins
+    front = pareto_front(pts)
+    assert front == [0, 1, 3]
+    losses = [pts[i][0] for i in front]
+    assert losses == sorted(losses)
+    times = [pts[i][1] for i in front]
+    assert times == sorted(times, reverse=True)
+
+
+# -------------------------------------------------------------- keep_groups --
+
+def test_keep_groups_precise_keeps_all():
+    assert keep_groups(6, 0.0) == tuple(range(6))
+    assert keep_groups(6, -1.0) == tuple(range(6))
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 16])
+@pytest.mark.parametrize("skip", [0.1, 0.25, 0.5, 0.75, 0.95])
+def test_keep_groups_first_and_last_always_kept(n, skip):
+    kept = keep_groups(n, skip)
+    assert kept[0] == 0
+    assert kept[-1] == n - 1
+    assert list(kept) == sorted(set(kept)), "sorted, unique"
+
+
+def test_keep_groups_extreme_skip_clamps_to_two():
+    assert keep_groups(12, 0.99) == (0, 11)
+    assert keep_groups(2, 0.99) == (0, 1)
+
+
+def test_keep_groups_tiny_stacks():
+    # a 1-group model can never drop its only group
+    assert keep_groups(1, 0.5) == (0,)
+    # skips too small to remove a whole group keep everything
+    assert keep_groups(4, 0.1) == (0, 1, 2, 3)
