@@ -9,7 +9,8 @@ import time
 def main() -> None:
     from benchmarks import (aggregate, breakdown, common, dynamic,
                             interval_sweep, kernel_bench, load_sweep,
-                            multiapp, pareto, qos_impact, roofline_table)
+                            multiapp, pareto, qos_impact, roofline_table,
+                            serve_qos)
     rows = common.Rows()
     t0 = time.time()
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -17,7 +18,7 @@ def main() -> None:
             ("fig1b", qos_impact), ("fig4", dynamic), ("fig5", aggregate),
             ("fig7", multiapp), ("fig8", load_sweep),
             ("fig9", interval_sweep), ("fig10", breakdown),
-            ("roofline", roofline_table)]
+            ("serve", serve_qos), ("roofline", roofline_table)]
     for name, mod in mods:
         if only and only != name:
             continue

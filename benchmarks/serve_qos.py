@@ -1,0 +1,84 @@
+"""Serving QoS benchmark: per serving-variant throughput and tail latency of
+the continuous-batching engine on the reduced config, plus one
+Pliant-controlled run — the serve-side perf trajectory (BENCH_serve.json)."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, Rows
+
+ARCH = "gemma2-27b-smoke"
+SLOTS, MAX_NEW, MAX_LEN, N_REQ, PROMPT = 4, 8, 32, 8, 6
+
+
+def _drive(eng, cfg, rng):
+    from repro.serve.engine import Request
+    reqs = [Request(i, prompt=list(rng.integers(1, cfg.vocab_size, PROMPT)),
+                    max_new=MAX_NEW) for i in range(N_REQ)]
+    import time
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in reqs)
+    lat = np.asarray(eng.step_latencies, float)
+    return {
+        "tok_s": toks / max(wall, 1e-9),
+        "p50_ms": 1e3 * float(np.percentile(lat, 50)),
+        "p95_ms": 1e3 * float(np.percentile(lat, 95)),
+        "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+        "steps": len(lat),
+    }
+
+
+def main(rows: Rows):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.controller import ControllerConfig
+    from repro.core.monitor import LatencyMonitor
+    from repro.core.runtime import PliantRuntime
+    from repro.launch.serve import serving_table
+    from repro.models import api
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(ARCH)
+    params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    table = serving_table(cfg, slots=SLOTS, max_len=MAX_LEN)
+    out = {}
+    for vi, v in enumerate(table.variants):
+        eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN,
+                          params=params, table=table)
+        eng.set_variant(vi)
+        stats = _drive(eng, cfg, np.random.default_rng(0))
+        out[v.name] = stats
+        rows.add(f"serve.{v.name}", 1e3 * stats["p95_ms"],
+                 f"tok_s={stats['tok_s']:.1f};p99_ms={stats['p99_ms']:.1f}")
+    # QoS target between precise and most-approximate p95: violation rate per
+    # variant against one shared target, plus a controlled (hot-swapping) run
+    target_s = 0.5 * (out[table.variants[0].name]["p95_ms"]
+                      + out[table.variants[-1].name]["p95_ms"]) / 1e3
+    for vi, v in enumerate(table.variants):
+        eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN,
+                          params=params, table=table)
+        eng.set_variant(vi)
+        _drive(eng, cfg, np.random.default_rng(1))
+        lat = np.asarray(eng.step_latencies, float)
+        out[v.name]["qos_target_ms"] = 1e3 * target_s
+        out[v.name]["violation_rate"] = float(np.mean(lat > target_s))
+    monitor = LatencyMonitor(qos_target_s=target_s, window=1024)
+    runtime = PliantRuntime(table, monitor,
+                            ControllerConfig(decision_interval_s=0.05))
+    eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN, params=params,
+                      table=table, runtime=runtime)
+    stats = _drive(eng, cfg, np.random.default_rng(2))
+    stats["swaps"] = eng.swaps
+    stats["final_variant"] = table.variants[eng.active_variant].name
+    out["pliant"] = stats
+    rows.add("serve.pliant", 1e3 * stats["p95_ms"],
+             f"tok_s={stats['tok_s']:.1f};swaps={len(eng.swaps)}")
+    (RESULTS_DIR / "BENCH_serve.json").write_text(json.dumps(out, indent=1))
+    return rows

@@ -1,5 +1,6 @@
-"""Serve a reduced model with continuous batching, precise vs approximate
-(int8 KV cache) serving variants — the Pliant serving-side knobs.
+"""Serve a reduced model with continuous batching under Pliant control:
+chunked-prefill admission, explorer-derived serving variants, and a QoS
+monitor hot-swapping the decode executable when the target is violated.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,8 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.knobs import ApproxKnobs
 from repro.configs import get_config
+from repro.core.controller import ControllerConfig
+from repro.core.monitor import LatencyMonitor
+from repro.core.runtime import PliantRuntime
+from repro.launch.serve import serving_table
 from repro.models import api
 from repro.serve.engine import Request, ServeEngine
 
@@ -18,13 +22,18 @@ from repro.serve.engine import Request, ServeEngine
 def main():
     cfg = get_config("gemma2-27b-smoke")
     params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    table = serving_table(cfg, slots=4, max_len=64)
+    print("serving variants (explorer grid):",
+          [v.name for v in table.variants])
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size, size=4)) for _ in
+    # prompts longer than the admission chunk: prefill streams in 8-token
+    # chunks into the batched caches instead of warming up via decode steps
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=20)) for _ in
                range(8)]
-    for name, knobs in [("precise", ApproxKnobs()),
-                        ("kv-int8", ApproxKnobs(kv_quant=True))]:
+    for vi, v in enumerate(table.variants):
         eng = ServeEngine(cfg, batch_slots=4, max_len=64, params=params,
-                          knobs=knobs)
+                          table=table, prefill_chunk=8)
+        eng.set_variant(vi)
         reqs = [Request(i, prompt=p, max_new=12)
                 for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
@@ -33,9 +42,23 @@ def main():
         eng.run()
         wall = time.perf_counter() - t0
         per_tok = np.mean(eng.step_latencies) * 1e3
-        print(f"{name:8s}: {len(reqs)} requests x 12 tokens through 4 slots "
-              f"in {wall:.2f}s ({per_tok:.1f} ms/engine-step)")
+        print(f"{v.name:10s}: {len(reqs)} requests x 12 tokens through 4 "
+              f"slots in {wall:.2f}s ({per_tok:.1f} ms/engine-step)")
         print(f"  first outputs: {reqs[0].out}")
+
+    # close the loop: an impossible QoS target forces the controller to jump
+    # to the most-approximate variant mid-run (watch the swap step index)
+    monitor = LatencyMonitor(qos_target_s=1e-6, window=256, min_samples=8)
+    runtime = PliantRuntime(table, monitor,
+                            ControllerConfig(decision_interval_s=0.0))
+    eng = ServeEngine(cfg, batch_slots=4, max_len=64, params=params,
+                      runtime=runtime, prefill_chunk=8, temperature=0.7)
+    reqs = [Request(i, prompt=p, max_new=12) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    print(f"pliant    : swaps={eng.swaps} -> "
+          f"active={table.variants[eng.active_variant].name}")
 
 
 if __name__ == "__main__":

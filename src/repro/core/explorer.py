@@ -42,9 +42,12 @@ def knob_grid(cfg: ModelConfig, *, serving: bool = False) -> List[ApproxKnobs]:
                               max(1, t // 4)})
     syncs = [1, 2, 4] if not serving else [1]
     compresses = ["none", "int8"] if not serving else ["none"]
+    # serving-only knob: int8 KV cache (orthogonal to matmul precision)
+    kv_quants = [False, True] if serving else [False]
     cands = []
-    for p, d, s, st, tk, sy, gc in itertools.product(
-            precisions, drops, skips, strides, topks, syncs, compresses):
+    for p, d, s, st, tk, sy, gc, kvq in itertools.product(
+            precisions, drops, skips, strides, topks, syncs, compresses,
+            kv_quants):
         if serving and (d or s):      # no token/layer drop for serving jobs
             continue
         if gc != "none" and sy > 1:
@@ -58,14 +61,13 @@ def knob_grid(cfg: ModelConfig, *, serving: bool = False) -> List[ApproxKnobs]:
         # cross-product; this also keeps top-end quality loss near the
         # measured 2-3% band instead of saturating the 5% cap
         active = sum([p != "bf16", d > 0, s > 0, st > 1, tk > 0, sy > 1,
-                      gc != "none"])
+                      gc != "none", kvq])
         if active > 2:
             continue
-        kv_quant = serving and p == "int8"
         cands.append(ApproxKnobs(matmul_precision=p, token_drop=d,
                                  layer_skip=s, kv_keep_stride=st,
                                  topk_override=tk, sync_period=sy,
-                                 grad_compress=gc, kv_quant=kv_quant))
+                                 grad_compress=gc, kv_quant=kvq))
     # dedupe, precise first
     seen, out = set(), []
     for k in [PRECISE] + cands:
@@ -131,7 +133,10 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
     else:
         mf = roofline.model_flops(cfg, shape, PRECISE)
         comp = mf / 256 / roofline.PEAK_FLOPS
-        mem = comp * 1.2
+        # decode streams every weight + the KV rings per emitted token at
+        # trivial arithmetic intensity: firmly HBM-bound, so memory-side knobs
+        # (int8 weights, kv_quant) keep paying off after compute knobs bind
+        mem = comp * (4.0 if shape.kind == "decode" else 1.2)
         coll = comp * 0.3
     # knob effects on each term
     f_tok = 1.0 - k.token_drop

@@ -19,6 +19,7 @@ class LatencyMonitor:
     qos_target_s: float
     window: int = 4096
     min_rate: float = 0.05
+    min_samples: int = 20           # below this the tail estimate abstains
     _buf: Deque[float] = field(default_factory=lambda: collections.deque())
     _rate: float = 1.0
     _rng: np.random.Generator = field(
@@ -28,7 +29,11 @@ class LatencyMonitor:
 
     def record(self, latency_s: float) -> None:
         self.n_seen += 1
-        if self._rng.random() > self._rate:
+        # bootstrap: below min_samples the estimator abstains entirely, so
+        # thinning there starves the controller of any tail signal (it would
+        # hold forever once the adaptive rate decays); fill first, thin after
+        if len(self._buf) >= self.min_samples \
+                and self._rng.random() > self._rate:
             return
         self.n_recorded += 1
         self._buf.append(float(latency_s))
@@ -48,12 +53,16 @@ class LatencyMonitor:
             self._rate = max(self.min_rate, closeness)
 
     def record_many(self, latencies) -> None:
-        """Vectorized record (thinned by the current sample rate)."""
+        """Vectorized record (thinned by the current sample rate; the first
+        samples up to ``min_samples`` always land — see ``record``)."""
         import numpy as _np
         lat = _np.asarray(latencies, float)
         self.n_seen += lat.size
+        need = max(0, self.min_samples - len(self._buf))
+        head, tail = lat[:need], lat[need:]
         if self._rate < 1.0:
-            lat = lat[self._rng.random(lat.size) <= self._rate]
+            tail = tail[self._rng.random(tail.size) <= self._rate]
+        lat = _np.concatenate([head, tail])
         self.n_recorded += lat.size
         self._buf.extend(lat.tolist())
         while len(self._buf) > self.window:
@@ -61,7 +70,7 @@ class LatencyMonitor:
         self._adapt()
 
     def p99(self) -> Optional[float]:
-        if len(self._buf) < 20:
+        if len(self._buf) < self.min_samples:
             return None
         return float(np.percentile(np.asarray(self._buf), 99))
 

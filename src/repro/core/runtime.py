@@ -29,6 +29,12 @@ class PliantRuntime:
     history: List[dict] = field(default_factory=list)
 
     def __post_init__(self):
+        if self.reshard_fn is None and self.cfg.max_reclaim:
+            # no actuator for chip reclamation: without this cap the
+            # controller burns decision intervals on phantom RECLAIM/RETURN
+            # actions before it will step back toward precise
+            import dataclasses
+            self.cfg = dataclasses.replace(self.cfg, max_reclaim=0)
         self.controller = PliantController(len(self.table), self.cfg)
         self._last_decision = time.monotonic()
 

@@ -60,6 +60,20 @@ def constrain_batch(x):
     return _constrain(x, P(BATCH_AXES, *([None] * (x.ndim - 1))))
 
 
+def constrain_replicated(x):
+    """Force a full replication boundary (explicit all-gather).
+
+    Used where the 0.4.x SPMD partitioner miscompiles an op combination on a
+    TP-sharded dim — e.g. split+concat over a sharded head_dim (rope) returns
+    wrong values; gathering first sidesteps it (serving admission path, where
+    the gathered chunk K/V are a few tokens wide). No-op off-mesh.
+    """
+    mesh = compat.active_mesh()
+    if mesh is None:
+        return x
+    return _constrain(x, P(*([None] * x.ndim)))
+
+
 def constrain_vocab(x):
     """Keep the trailing (vocab) dim TP-sharded — the chunked cross-entropy
     relies on this so GSPMD never replicates the (B, C, V) logit tile."""

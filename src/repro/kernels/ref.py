@@ -97,12 +97,14 @@ def ssd_ref(x, dt, a, b, c, *, d_skip=None):
 
 
 def ssd_chunked_ref(x, dt, a, b, c, *, chunk=64, d_skip=None,
-                    return_state=False):
+                    return_state=False, init_state=None):
     """Chunked (state-space-duality) jnp implementation — the algorithm the
     Pallas kernel implements; also the model's CPU/dry-run path.
 
     ``return_state=True`` additionally returns the final (B,H,P,N) state —
-    used by serving prefill to hand off into incremental decode."""
+    used by serving prefill to hand off into incremental decode.
+    ``init_state`` seeds the recurrence with an existing (B,H,P,N) state so a
+    prompt can be consumed in chunks (serving chunked-prefill admission)."""
     Bsz, S, H, P = x.shape
     N = b.shape[-1]
     Q = min(chunk, S)
@@ -146,7 +148,8 @@ def ssd_chunked_ref(x, dt, a, b, c, *, chunk=64, d_skip=None,
     # noise (a NEGATIVE byte marginal) instead of body cost. Fully static,
     # every chunk body is counted exactly in the base compile.
     decay = jnp.exp(total[:, :, 0, :])               # (B,nc,H)
-    s = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    s = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
     enters = []
     for ci in range(nc):
         enters.append(s)

@@ -1,8 +1,15 @@
-"""Serving driver: continuous-batching engine over a reduced config, with
-Pliant serving knobs selectable per run (precise / int8 / int8+kv-quant).
+"""Open-loop serving driver: Poisson arrivals into the continuous-batching
+engine, with the Pliant control loop (monitor -> controller -> variant
+hot-swap) closed over per-token latency.
+
+Serving variants come from the explorer's serving-applicable grid — one
+source of truth with the colocation benchmarks, ordered precise-first.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b-smoke \
-      --requests 16 --slots 4 --max-new 12 [--variant int8_kvq]
+      --requests 16 --slots 4 --max-new 12 --rate 50 --qos-target 0.05
+
+``--qos-target 0`` disables control (pin a variant with ``--variant``);
+``--mesh 2x4`` serves sharded over an 8-device (data, model) mesh.
 """
 from __future__ import annotations
 
@@ -13,17 +20,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.approx.knobs import ApproxKnobs
 from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.controller import ControllerConfig
+from repro.core.explorer import explore
+from repro.core.monitor import LatencyMonitor
+from repro.core.runtime import PliantRuntime
+from repro.core.variants import VariantTable
 from repro.models import api
 from repro.serve.engine import Request, ServeEngine
 
-VARIANTS = {
-    "precise": ApproxKnobs(),
-    "int8": ApproxKnobs(matmul_precision="int8"),
-    "kvq": ApproxKnobs(kv_quant=True),
-    "int8_kvq": ApproxKnobs(matmul_precision="int8", kv_quant=True),
-}
+
+def serving_table(cfg: ModelConfig, *, slots: int, max_len: int,
+                  max_loss: float = 0.05) -> VariantTable:
+    """The serving VariantTable for one engine shape, from the explorer."""
+    shape = ShapeConfig("serve", max_len, slots, "decode")
+    return explore(cfg, shape, serving=True, max_loss=max_loss)
+
+
+def percentiles(lat, ps=(50, 95, 99)):
+    if not lat:
+        return {p: float("nan") for p in ps}
+    a = np.asarray(lat, float)
+    return {p: float(np.percentile(a, p)) for p in ps}
 
 
 def main(argv=None):
@@ -33,27 +52,99 @@ def main(argv=None):
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=12)
     p.add_argument("--max-len", type=int, default=64)
-    p.add_argument("--variant", default="precise", choices=list(VARIANTS))
+    p.add_argument("--prompt-len", type=int, default=6)
+    p.add_argument("--prefill-chunk", type=int, default=16)
+    p.add_argument("--rate", type=float, default=0.0,
+                   help="Poisson arrival rate (req/s); 0 = all at t=0")
+    p.add_argument("--qos-target", type=float, default=0.0,
+                   help="per-token latency QoS target (s); 0 = no control")
+    p.add_argument("--decision-interval", type=float, default=0.25)
+    p.add_argument("--variant", default=None,
+                   help="pin a variant by name (e.g. int8); default precise "
+                        "or Pliant-controlled when --qos-target is set")
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--mesh", default="",
+                   help="serve sharded, e.g. 2x4 -> (data=2, model=4)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
     params = api.init(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
+    table = serving_table(cfg, slots=args.slots, max_len=args.max_len)
+    names = [v.name for v in table.variants]
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        assert len(shape) == 2, "--mesh must be DxM (data x model)"
+        mesh = make_mesh(shape, ("data", "model"))
+
+    runtime = None
+    if args.qos_target > 0:
+        # tail-estimate floor scaled to engine width: one step contributes at
+        # most `slots` samples, and slow (compile-heavy) steps mean a decision
+        # window may span a single step — don't let the estimator starve
+        monitor = LatencyMonitor(qos_target_s=args.qos_target, window=1024,
+                                 min_samples=min(20, max(4, 2 * args.slots)))
+        runtime = PliantRuntime(table, monitor, ControllerConfig(
+            decision_interval_s=args.decision_interval))
     eng = ServeEngine(cfg, batch_slots=args.slots, max_len=args.max_len,
-                      params=params, knobs=VARIANTS[args.variant])
+                      params=params, table=table, runtime=runtime,
+                      temperature=args.temperature, mesh=mesh,
+                      prefill_chunk=args.prefill_chunk, seed=args.seed)
+    if args.variant is not None:
+        eng.set_variant(names.index(args.variant))
+
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(i, prompt=list(rng.integers(1, cfg.vocab_size, 4)),
+    reqs = [Request(i, prompt=list(rng.integers(1, cfg.vocab_size,
+                                                args.prompt_len)),
                     max_new=args.max_new) for i in range(args.requests)]
+    arrivals = (np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+                if args.rate > 0 else np.zeros(args.requests))
+
     t0 = time.perf_counter()
-    for r in reqs:
-        eng.submit(r)
-    eng.run()
+    nxt, steps = 0, 0
+    while not all(r.done for r in reqs) and steps < 100_000:
+        now = time.perf_counter() - t0
+        while nxt < len(reqs) and arrivals[nxt] <= now:
+            reqs[nxt].t_arrival = t0 + arrivals[nxt]
+            eng.submit(reqs[nxt])
+            nxt += 1
+        if not eng.pending and all(s is None for s in eng.slots):
+            if nxt < len(reqs):      # open loop: idle until the next arrival
+                time.sleep(min(arrivals[nxt] - now, 0.01))
+                continue
+            break
+        eng.step()
+        steps += 1
     wall = time.perf_counter() - t0
+
+    # per-token latency seen by each request (inter-token gap; first token's
+    # gap runs from arrival, so it includes queueing + admission prefill)
+    tok_lat, ttft = [], []
+    for r in reqs:
+        if not r.token_times:
+            continue
+        ts = [r.t_arrival or r.t_admit] + r.token_times
+        tok_lat.extend(b - a for a, b in zip(ts, ts[1:]))
+        ttft.append(r.token_times[0] - ts[0])
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
-    print(f"{args.variant}: {done}/{len(reqs)} requests, {toks} tokens in "
-          f"{wall:.2f}s ({1e3*np.mean(eng.step_latencies):.1f} ms/step, "
-          f"{toks/wall:.1f} tok/s)")
+    pct = percentiles(tok_lat)
+    viol = (float(np.mean(np.asarray(tok_lat) > args.qos_target))
+            if args.qos_target > 0 and tok_lat else 0.0)
+    print(f"variants: {names} (active={names[eng.active_variant]})")
+    print(f"{done}/{len(reqs)} requests, {toks} tokens in {wall:.2f}s "
+          f"({toks / max(wall, 1e-9):.1f} tok/s, rate={args.rate}/s)")
+    ttft95 = float(np.percentile(ttft, 95)) if ttft else float("nan")
+    print(f"per-token latency ms: p50={1e3 * pct[50]:.1f} "
+          f"p95={1e3 * pct[95]:.1f} p99={1e3 * pct[99]:.1f}  "
+          f"ttft p95={1e3 * ttft95:.1f}")
+    if args.qos_target > 0:
+        acts = [h["action"] for h in runtime.history if h["action"] != "hold"]
+        print(f"qos: target={1e3 * args.qos_target:.1f}ms "
+              f"violation_rate={viol:.3f} swaps={eng.swaps} actions={acts}")
     return 0
 
 

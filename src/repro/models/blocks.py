@@ -67,6 +67,37 @@ def block_forward(kind: str, params, h, positions, cfg: ModelConfig,
     return h, aux
 
 
+def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
+                  knobs: ApproxKnobs = PRECISE, *,
+                  ep_axis: Optional[str] = None, mesh=None):
+    """C-token prompt-chunk step against an existing cache.
+
+    h: (B,C,D); positions: (B,C) absolute. Returns (h, new_cache, aux) — the
+    chunk-sized sibling of ``block_decode`` (serving admission path)."""
+    aux = jnp.zeros((), jnp.float32)
+    prec = knobs.matmul_precision
+    if kind == MAMBA:
+        y, new_cache = mamba_mod.mamba_prefill(
+            params["mixer"], rms_norm(h, params["norm"], cfg.norm_eps),
+            cache, cfg, precision=prec)
+        return h + y, new_cache, aux
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
+    y, new_cache = attn_mod.chunk_decode_attention(
+        params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
+        positions, cache, cfg, window=window, kv_scale=kv_scale)
+    h = h + y
+    hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
+    if "moe" in params:
+        y, aux = moe_mod.moe(params["moe"], hn, cfg,
+                             top_k=knobs.topk_override, precision=prec,
+                             ep_axis=ep_axis, mesh=mesh)
+        h = h + y
+    else:
+        h = h + mlp_mod.mlp(params["mlp"], hn, precision=prec)
+    return h, new_cache, aux
+
+
 def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
                  knobs: ApproxKnobs = PRECISE, *,
                  ep_axis: Optional[str] = None, mesh=None,
@@ -80,7 +111,7 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
             cache, cfg, precision=prec)
         return h + y, new_cache, aux
     window = cfg.window if kind == LOCAL_ATTN else 0
-    kv_scale = 0.05 if knobs.kv_quant else 0.0
+    kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
     y, new_cache = attn_mod.decode_attention(
         params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
         position, cache, cfg, window=window, kv_scale=kv_scale)

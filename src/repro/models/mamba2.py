@@ -96,6 +96,42 @@ def mamba_mixer(params, x, cfg: ModelConfig, *, precision: str = "bf16"):
     return mm(y, params["out_proj"])
 
 
+def mamba_prefill(params, x, cache: MambaCache, cfg: ModelConfig, *,
+                  precision: str = "bf16"):
+    """C-token prompt-chunk step continuing from an existing cache.
+
+    x: (B,C,D) -> ((B,C,D), new_cache). Runs the chunked SSD path seeded with
+    the cached state and conv history, so a prompt consumed chunk-by-chunk
+    lands in exactly the state C successive ``mamba_decode`` calls produce —
+    the serving chunked-prefill admission path.
+    """
+    from repro.kernels import ref as kref
+    B, C, D = x.shape
+    di, nh, n = _dims(cfg)
+    mm = kops.matmul(precision)
+    z = mm(x, params["in_z"])
+    xs, hist_x = _causal_conv(mm(x, params["in_x"]), params["conv_x"],
+                              history=cache.conv_x)
+    bc, hist_bc = _causal_conv(x @ params["in_bc"], params["conv_bc"],
+                               history=cache.conv_bc)
+    dt_raw = x @ params["in_dt"]
+    b, c = jnp.split(bc, 2, axis=-1)
+    xs4 = xs.reshape(B, C, nh, cfg.ssm.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    # largest divisor of C <= the configured SSD chunk (C need not divide it)
+    q = min(cfg.ssm.chunk, C)
+    while C % q:
+        q -= 1
+    y, state = kref.ssd_chunked_ref(xs4, dt, a, b, c, chunk=q,
+                                    d_skip=params["d_skip"],
+                                    return_state=True, init_state=cache.state)
+    y = y.reshape(B, C, di)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return mm(y, params["out_proj"]), MambaCache(hist_x, hist_bc, state)
+
+
 def mamba_decode(params, x, cache: MambaCache, cfg: ModelConfig, *,
                  precision: str = "bf16"):
     """Single-token decode. x: (B,1,D) -> ((B,1,D), new_cache)."""

@@ -1,24 +1,40 @@
-"""Batched serving engine: continuous-batching slots over the decode step.
+"""Batched serving engine: continuous-batching slots over the decode step,
+run under Pliant control.
 
 Each slot holds one request's progress; finished slots are refilled from the
-queue without stopping the batch ("continuous batching"). The Pliant serving
-knobs (int8 matmuls, int8 KV cache) select which compiled decode executable
-runs — switched between steps exactly like training variants.
+queue without stopping the batch ("continuous batching"). Admission is
+chunked prefill: the prompt streams through fixed-size full-sequence chunks
+(``serve.prefill.prefill_chunk``) into a single-request cache that is then
+slot-scattered into the batched caches (``serve.slots``) — no O(prompt)
+token-by-token warmup on the decode path, so 32k prompts admit in a handful
+of executable calls.
+
+Serving variants come from a ``VariantTable`` (the explorer's serving grid):
+every variant's decode executable is registered up front and the active one
+is swapped at a step boundary — an O(µs) dictionary lookup, the DynamoRIO
+function-pointer swap analogue. When a ``PliantRuntime`` is attached, the
+engine feeds per-token latency to its ``LatencyMonitor`` and actuates the
+controller's decisions, converting cache dtype when a swap crosses the
+``kv_quant`` boundary. Under a mesh, params shard via
+``dist.param_shardings`` and caches via ``dist.cache_shardings``.
 """
 from __future__ import annotations
 
-import dataclasses
+import contextlib
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.approx.knobs import ApproxKnobs, PRECISE
-from repro.configs.base import ModelConfig
-from repro.models import api, lm
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.runtime import PliantRuntime
+from repro.core.variants import VariantTable
+from repro.models import lm
+from repro.serve import slots as slots_mod
 from repro.train import step as step_mod
 
 
@@ -29,7 +45,9 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
-    cursor: int = 0       # next prompt token to feed (cache-warmup progress)
+    t_arrival: float = 0.0    # driver-set (open-loop client)
+    t_admit: float = 0.0
+    token_times: List[float] = field(default_factory=list)
 
 
 @dataclass
@@ -37,74 +55,223 @@ class ServeEngine:
     cfg: ModelConfig
     batch_slots: int
     max_len: int
-    knobs: ApproxKnobs = PRECISE
-    temperature: float = 0.0
+    knobs: ApproxKnobs = PRECISE       # single-variant mode (no table)
+    temperature: float = 0.0           # 0.0 = greedy
     params: object = None
+    table: Optional[VariantTable] = None
+    runtime: Optional[PliantRuntime] = None
+    mesh: object = None
+    policy: str = "tp"                 # param sharding policy under a mesh
+    prefill_chunk: int = 16
+    seed: int = 0
+    cache_dtype: object = jnp.float32
 
     def __post_init__(self):
-        self._decode = jax.jit(
-            step_mod.make_serve_step(self.cfg, self.knobs))
-        self.caches = lm.init_caches(
-            self.cfg, self.batch_slots, self.max_len,
-            dtype=jnp.float32, quantized=self.knobs.kv_quant)
+        if self.runtime is not None:
+            self.table = self.runtime.table
+        self._variant_knobs = ([v.knobs for v in self.table.variants]
+                               if self.table is not None else [self.knobs])
+        self._active = 0
+        self._param_sh = self._cache_sh = None
+        if self.mesh is not None:
+            from repro.dist import sharding as dist_sharding
+            self._param_sh = dist_sharding.param_shardings(
+                self.cfg, self.mesh, self.policy)
+            shp = ShapeConfig("serve", self.max_len, self.batch_slots,
+                              "decode")
+            self._cache_sh, _ = dist_sharding.cache_shardings(self.cfg, shp,
+                                                              self.mesh)
+            with self._ctx():
+                self.params = jax.device_put(self.params, self._param_sh)
+
+        # the variant table of decode executables: registered once up front,
+        # hot-swapped between steps (no recompilation on the critical path).
+        # Engine-owned, never written into the (possibly shared) table —
+        # executables are lowered against THIS engine's mesh/shardings
+        self._decodes = {
+            i: self._lower_decode(step_mod.make_serve_step(self.cfg, k))
+            for i, k in enumerate(self._variant_knobs)}
+        self._prefills: Dict[Tuple[int, int], object] = {}
+        self._insert = jax.jit(slots_mod.insert_request)
+
+        self.caches = self._init_caches(self.active_knobs.kv_quant)
         self.positions = np.zeros(self.batch_slots, np.int32)
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self.pending: List[Request] = []
         self.cur_tokens = np.zeros(self.batch_slots, np.int32)
         self.step_latencies: List[float] = []
+        self.admit_latencies: List[float] = []
+        self.swaps: List[Tuple[int, int]] = []   # (step index, variant index)
+        self._token_lat: List[float] = []        # unflushed monitor samples
+        self._rng = np.random.default_rng(self.seed)
+
+    # ------------------------------------------------------------ variants --
+
+    @property
+    def active_variant(self) -> int:
+        return self._active
+
+    @property
+    def active_knobs(self) -> ApproxKnobs:
+        return self._variant_knobs[self._active]
+
+    def set_variant(self, idx: int) -> None:
+        """Hot-swap the decode executable at a step boundary, converting the
+        KV rings when the swap crosses the ``kv_quant`` boundary."""
+        if idx == self._active:
+            return
+        old, new = self.active_knobs, self._variant_knobs[idx]
+        if old.kv_quant != new.kv_quant:
+            with self._ctx():
+                self.caches = slots_mod.convert_caches(
+                    self.caches, new.kv_quant, self.cache_dtype)
+                if self._cache_sh is not None:
+                    self.caches = jax.device_put(self.caches, self._cache_sh)
+        self._active = idx
+        self.swaps.append((len(self.step_latencies), idx))
+
+    def _lower_decode(self, step):
+        if self.mesh is None:
+            return jax.jit(step)
+        return jax.jit(step,
+                       in_shardings=(self._param_sh, None, None,
+                                     self._cache_sh),
+                       out_shardings=(None, self._cache_sh))
+
+    def _prefill_exe(self, chunk_len: int):
+        key = (self._active, chunk_len)
+        fn = self._prefills.get(key)
+        if fn is None:
+            step = step_mod.make_admission_step(self.cfg, self.active_knobs)
+            if self.mesh is None:
+                fn = jax.jit(step)
+            else:
+                fn = jax.jit(step, in_shardings=(self._param_sh, None, None,
+                                                 None))
+            self._prefills[key] = fn
+        return fn
+
+    # ------------------------------------------------------------- helpers --
+
+    def _ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.dist import compat
+        return compat.set_mesh(self.mesh)
+
+    def _init_caches(self, quantized: bool):
+        caches = lm.init_caches(self.cfg, self.batch_slots, self.max_len,
+                                dtype=self.cache_dtype, quantized=quantized)
+        if self._cache_sh is not None:
+            with self._ctx():
+                caches = jax.device_put(caches, self._cache_sh)
+        return caches
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(p.size, p=p))
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
-    def _reset_slot_cache(self, i: int) -> None:
-        """Invalidate slot i's cache rows (stale entries must never attend)."""
-        def reset(c):
-            if hasattr(c, "pos"):            # attention KVCache
-                return c._replace(pos=c.pos.at[:, i].set(-1))
-            return c._replace(                # MambaCache
-                conv_x=c.conv_x.at[:, i].set(0),
-                conv_bc=c.conv_bc.at[:, i].set(0),
-                state=c.state.at[:, i].set(0))
-        self.caches = tuple(reset(c) for c in self.caches)
+    # ----------------------------------------------------------- admission --
 
-    def _fill_slots(self) -> None:
+    def _chunked_prefill(self, prompt: List[int]):
+        """Stream the prompt through fixed-size chunks into a fresh
+        single-request cache. Returns (last-token logits, caches)."""
+        knobs = self.active_knobs
+        caches = lm.init_caches(self.cfg, 1, self.max_len,
+                                dtype=self.cache_dtype,
+                                quantized=knobs.kv_quant)
+        toks = np.asarray(prompt, np.int32)
+        S, start, logits = len(prompt), 0, None
+        with self._ctx():
+            while start < S:
+                C = min(self.prefill_chunk, S - start)
+                logits, caches = self._prefill_exe(C)(
+                    self.params, jnp.asarray(toks[None, start:start + C]),
+                    jnp.asarray(start, jnp.int32), caches)
+                start += C
+        return logits, caches
+
+    def _admit(self) -> None:
         for i in range(self.batch_slots):
-            if self.slots[i] is None and self.pending:
+            while self.slots[i] is None and self.pending:
                 req = self.pending.pop(0)
+                assert len(req.prompt) <= self.max_len, \
+                    (len(req.prompt), self.max_len)
+                t0 = time.perf_counter()
+                logits, rcaches = self._chunked_prefill(req.prompt)
+                with self._ctx():
+                    self.caches = self._insert(self.caches, rcaches, i)
+                    if self._cache_sh is not None:
+                        self.caches = jax.device_put(self.caches,
+                                                     self._cache_sh)
+                tok = self._sample(np.asarray(logits)[0])
+                now = time.perf_counter()
+                self.admit_latencies.append(now - t0)
+                self._token_lat.append(now - t0)   # TTFT sample
+                req.t_admit = t0
+                req.out.append(tok)
+                req.token_times.append(now)
+                if len(req.out) >= req.max_new:
+                    req.done = True                # 1-token request: no slot
+                    continue
+                self.positions[i] = len(req.prompt)
+                self.cur_tokens[i] = tok
                 self.slots[i] = req
-                self._reset_slot_cache(i)
-                # prompt tokens are fed through decode steps (cache warmup)
-                req.cursor = 0
-                self.positions[i] = 0
-                self.cur_tokens[i] = req.prompt[0]
+
+    # --------------------------------------------------------------- steps --
 
     def step(self) -> None:
-        """One engine step: decode one token for every active slot."""
-        self._fill_slots()
+        """One engine step: admit pending requests (chunked prefill), decode
+        one token for every active slot, then tick the Pliant control loop."""
+        self._admit()
         if all(s is None for s in self.slots):
+            self._control_tick()       # flush TTFT samples of 1-token admits
             return
         t0 = time.perf_counter()
-        toks = jnp.asarray(self.cur_tokens)[:, None]
-        pos = jnp.asarray(self.positions)
-        logits, self.caches = self._decode(self.params, toks, pos,
-                                           self.caches)
-        logits = np.asarray(logits)
-        self.step_latencies.append(time.perf_counter() - t0)
+        with self._ctx():
+            toks = jnp.asarray(self.cur_tokens)[:, None]
+            pos = jnp.asarray(self.positions)
+            logits, self.caches = self._decodes[self._active](
+                self.params, toks, pos, self.caches)
+            logits = np.asarray(logits)
+        dt = time.perf_counter() - t0
+        self.step_latencies.append(dt)
+        now = time.perf_counter()
+        n_emitted = 0
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             self.positions[i] += 1
-            if req.cursor + 1 < len(req.prompt):
-                # still consuming the prompt
-                req.cursor += 1
-                self.cur_tokens[i] = req.prompt[req.cursor]
-                continue
-            nxt = int(np.argmax(logits[i]))
+            nxt = self._sample(logits[i])
             req.out.append(nxt)
+            req.token_times.append(now)
             self.cur_tokens[i] = nxt
+            n_emitted += 1
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.slots[i] = None            # slot freed: continuous batch
+        self._token_lat.extend([dt] * n_emitted)
+        self._control_tick()
+
+    def _control_tick(self) -> None:
+        """Monitor -> controller -> actuator at the step boundary."""
+        if self.runtime is None:
+            self._token_lat.clear()
+            return
+        if self._token_lat:
+            self.runtime.monitor.record_many(self._token_lat)
+            self._token_lat.clear()
+        self.runtime.maybe_decide()
+        if self.runtime.active_variant != self._active:
+            self.set_variant(self.runtime.active_variant)
 
     def run(self, max_steps: int = 10_000) -> None:
         steps = 0

@@ -91,6 +91,38 @@ def _mamba_block_with_state(params, h, cfg, knobs):
     return h, cache
 
 
+def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
+                  knobs: ApproxKnobs = PRECISE):
+    """One prompt chunk against existing decode caches (chunked admission).
+
+    tokens: (B, C); start: scalar int32 absolute position of the chunk's
+    first token (traced — one executable serves every chunk of length C);
+    caches: ``lm.init_caches`` layout. Returns (last-token logits (B,V) fp32,
+    advanced caches). Iterating this over prompt chunks is the serving
+    admission path: 32k prompts stream through fixed-size executables instead
+    of one O(prompt) warmup per token or one giant full-sequence compile.
+    """
+    from repro.models.blocks import block_prefill
+    h = params["embed"][tokens]
+    B, C, D = h.shape
+    positions = start + jnp.broadcast_to(jnp.arange(C), (B, C))
+    shared = params.get("shared")
+
+    def group_body(h, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for j, kind in enumerate(cfg.pattern):
+            p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
+            h, nc, _ = block_prefill(kind, p, h, positions, group_caches[j],
+                                     cfg, knobs)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    h, new_caches = jax.lax.scan(group_body, h, (params["groups"], caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, h[:, -1], cfg), new_caches
+
+
 def prefill_with_cache(params, tokens, cfg: ModelConfig, max_len: int,
                        knobs: ApproxKnobs = PRECISE):
     """tokens: (B, S) -> (last-token logits (B,V) fp32, decode caches).

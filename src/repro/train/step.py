@@ -138,6 +138,20 @@ def make_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
     return step
 
 
+def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+    """Returns step(params, tokens, start, caches) -> (logits, caches).
+
+    One prompt chunk against existing decode caches — the serving engine's
+    chunked-prefill admission cell. ``start`` is traced, so ONE executable
+    per (variant, chunk length) serves every chunk of a streaming prompt."""
+    from repro.serve import prefill as prefill_mod
+
+    def step(params, tokens, start, caches):
+        return prefill_mod.prefill_chunk(params, tokens, start, caches, cfg,
+                                         knobs=knobs)
+    return step
+
+
 def make_prefill_fn(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                     ep_axis: Optional[str] = None, mesh=None,
                     remat: str = "full"):

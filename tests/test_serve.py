@@ -55,6 +55,29 @@ def test_slot_reuse_isolated():
     assert b.out == greedy_ref(b.prompt, 4)
 
 
+def test_temperature_sampling():
+    """temperature=0 is greedy; temperature>0 samples from the softmax with a
+    per-engine PRNG: deterministic per seed, different across seeds."""
+    def outs(temperature, seed):
+        eng = ServeEngine(CFG, batch_slots=2, max_len=64, params=PARAMS,
+                          temperature=temperature, seed=seed)
+        reqs = [Request(uid, prompt=[4 + uid, 9], max_new=8)
+                for uid in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs]
+
+    greedy = outs(0.0, 0)
+    assert greedy == outs(0.0, 7), "greedy must ignore the sampling seed"
+    assert greedy == [greedy_ref(r, 8) for r in ([4, 9], [5, 9], [6, 9])]
+    hot = outs(1.0, 0)
+    assert hot == outs(1.0, 0), "same seed must reproduce sampled outputs"
+    assert hot != greedy, "T=1 sampling should diverge from argmax"
+    assert hot != outs(1.0, 1), "different seeds should diverge"
+
+
 def test_int8_kv_quant_variant_close():
     precise = ServeEngine(CFG, batch_slots=2, max_len=64, params=PARAMS)
     approx = ServeEngine(CFG, batch_slots=2, max_len=64, params=PARAMS,
