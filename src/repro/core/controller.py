@@ -1,7 +1,11 @@
 """Pliant runtime algorithm — faithful implementation of paper Fig. 3.
 
 State per colocation: the active variant index (0 = precise) and the number
-of reclaimed chip-groups. Per decision interval:
+of reclaimed resource quanta. The controller is deliberately agnostic to
+WHAT a quantum is — the actuator decides: chip-groups for elastic batch
+jobs (``PliantRuntime.reshard_fn``), page-pool quanta (``pool_pages``) for
+the paged serving cache (``serve.pages.PagePool.set_reclaimed``). Per
+decision interval:
 
 * QoS violated, not at most-approximate  -> jump to MOST approximate variant
 * QoS violated, already most-approximate -> reclaim one chip-group
@@ -32,7 +36,7 @@ class Action(enum.Enum):
 class ControllerConfig:
     slack_threshold: float = 0.10
     decision_interval_s: float = 1.0
-    max_reclaim: int = 8            # chip-groups reclaimable from a batch job
+    max_reclaim: int = 8            # reclaimable quanta (chip-groups / pages)
 
 
 @dataclass

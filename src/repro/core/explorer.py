@@ -118,12 +118,19 @@ def analytic_quality_loss(cfg: ModelConfig, k: ApproxKnobs) -> float:
 
 
 def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
-                  baseline_art: Optional[dict] = None
+                  baseline_art: Optional[dict] = None, *,
+                  page_occupancy: Optional[float] = None
                   ) -> Tuple[float, ResourcePressure]:
     """(rel_time, pressure) from the roofline model.
 
     If a dry-run artifact for the precise variant is given, its three terms
     anchor the baseline; knob deltas scale each term analytically.
+
+    ``page_occupancy`` (paged serving engines): fraction of the dense cache
+    footprint that is live pages. Dense decode streams the full ``max_len``
+    rings every step; a paged pool streams only mapped pages, so the
+    KV share of the decode memory term scales by occupancy — the frontier
+    then sees paged memory savings exactly like any other memory-side knob.
     """
     from repro import roofline
     if baseline_art is not None:
@@ -164,6 +171,12 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
         f_coll *= 0.3
     if k.kv_quant:
         f_mem *= 0.7
+    if page_occupancy is not None and shape.kind == "decode":
+        # decode HBM traffic priced by LIVE pages: the KV share of the
+        # memory term (the rings dominate weight streaming at long context)
+        kv_share = 0.5
+        occ = min(max(page_occupancy, 0.0), 1.0)
+        f_mem *= (1 - kv_share) + kv_share * occ
     comp2, mem2, coll2 = comp * f_flops, mem * f_mem, coll * f_coll
     t_prec = max(comp, mem, coll)
     t = max(comp2, mem2, coll2)
@@ -194,11 +207,13 @@ def pareto_front(points: Sequence[Tuple[float, float]]) -> List[int]:
 def explore(cfg: ModelConfig, shape, *, serving: bool = False,
             max_loss: float = 0.05, baseline_art: Optional[dict] = None,
             evaluate: Optional[Callable] = None,
-            max_variants: int = 8) -> VariantTable:
+            max_variants: int = 8,
+            page_occupancy: Optional[float] = None) -> VariantTable:
     """Build the ordered VariantTable for one (arch, shape) colocation.
 
     ``evaluate(knobs) -> (rel_time, quality_loss, pressure)`` overrides the
     analytic backend (the measured path used by benchmarks).
+    ``page_occupancy`` prices decode HBM by live pages (paged engines).
     """
     cands = knob_grid(cfg, serving=serving)
     evaluated = []
@@ -206,7 +221,8 @@ def explore(cfg: ModelConfig, shape, *, serving: bool = False,
         if evaluate is not None:
             rel_t, qloss, pressure = evaluate(k)
         else:
-            rel_t, pressure = analytic_cost(cfg, shape, k, baseline_art)
+            rel_t, pressure = analytic_cost(cfg, shape, k, baseline_art,
+                                            page_occupancy=page_occupancy)
             qloss = analytic_quality_loss(cfg, k)
         evaluated.append(Variant(k, rel_t, qloss, pressure))
     # threshold first (paper: discard variants with inaccuracy > 5%)

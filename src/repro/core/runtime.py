@@ -38,6 +38,23 @@ class PliantRuntime:
         self.controller = PliantController(len(self.table), self.cfg)
         self._last_decision = time.monotonic()
 
+    def attach_reclaimer(self, fn: Callable[[int], None],
+                         max_reclaim: Optional[int] = None) -> None:
+        """Late-bind a reclaim actuator and restore the reclaim budget.
+
+        Construction order often puts the actuator after the runtime (the
+        serve engine builds its page pool with the runtime already in hand),
+        so ``__post_init__`` has zeroed ``max_reclaim`` by the time the
+        actuator exists. ``fn(k)`` is called with the controller's current
+        reclaimed-quanta count — chip-groups for train jobs (``reshard_fn``),
+        page-pool quanta for paged serving (``PagePool.set_reclaimed``).
+        """
+        import dataclasses
+        self.reshard_fn = fn
+        if max_reclaim is not None:
+            self.cfg = dataclasses.replace(self.cfg, max_reclaim=max_reclaim)
+            self.controller.cfg = self.cfg
+
     @property
     def active_variant(self) -> int:
         return self.controller.state.variant

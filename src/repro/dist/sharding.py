@@ -119,19 +119,24 @@ def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
 # ----------------------------------------------------------------- caches --
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
-                    seq_axis: str = "model", quantized: bool = False):
+                    seq_axis: str = "model", quantized: bool = False,
+                    paged=None):
     """(sharding tree, abstract caches) for sequence-sharded decode.
 
-    KV caches shard the cache-length dim over ``seq_axis`` (GSPMD lowers the
-    attention softmax over it to partial reductions) and the batch dim over
-    the batch axes. Mamba states have no sequence dim; they shard batch only.
-    Returns trees with the exact structure of ``models.*.init_caches``.
+    Dense KV caches shard the cache-length dim over ``seq_axis`` (GSPMD
+    lowers the attention softmax over it to partial reductions) and the
+    batch dim over the batch axes. Paged pools (``paged`` = PageSpec) shard
+    the physical-page dim over ``seq_axis`` instead — the page gather and
+    the one-hot page scatter are both elementwise over it — with block
+    tables sharded over batch. Mamba states have no sequence dim; they shard
+    batch only. Returns trees with the exact structure of ``init_caches`` /
+    ``init_paged_caches``.
     """
     from repro.models import api
-    from repro.models.attention import KVCache
+    from repro.models.attention import KVCache, PagedKVCache
     from repro.models.mamba2 import MambaCache
     caches_abs = api.abstract_caches(cfg, shape.global_batch, shape.seq_len,
-                                     quantized=quantized)
+                                     quantized=quantized, paged=paged)
     bspec = batch_pspec(shape.global_batch, mesh)
     b = bspec[0] if len(bspec) else None
 
@@ -144,6 +149,14 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
     def one(c):
         # leaves are group-stacked: dim 0 = layer groups (scan carried)
+        if isinstance(c, PagedKVCache):
+            pg = seq_ax(c.kp.shape[1])
+            kv = NamedSharding(mesh, P(None, pg, None, None, None))
+            return PagedKVCache(
+                kp=kv, vp=kv,
+                ppos=NamedSharding(mesh, P(None, pg, None)),
+                block=NamedSharding(mesh,
+                                    P(None, batch_ax(c.block.shape[1]), None)))
         if isinstance(c, KVCache):
             bb, ss = batch_ax(c.k.shape[1]), seq_ax(c.k.shape[2])
             kv = NamedSharding(mesh, P(None, bb, ss, None, None))
@@ -158,5 +171,6 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             c)
 
     sh = jax.tree.map(one, caches_abs,
-                      is_leaf=lambda x: isinstance(x, (KVCache, MambaCache)))
+                      is_leaf=lambda x: isinstance(
+                          x, (KVCache, PagedKVCache, MambaCache)))
     return sh, caches_abs

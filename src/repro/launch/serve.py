@@ -32,10 +32,15 @@ from repro.serve.engine import Request, ServeEngine
 
 
 def serving_table(cfg: ModelConfig, *, slots: int, max_len: int,
-                  max_loss: float = 0.05) -> VariantTable:
-    """The serving VariantTable for one engine shape, from the explorer."""
+                  max_loss: float = 0.05,
+                  page_occupancy: float = None) -> VariantTable:
+    """The serving VariantTable for one engine shape, from the explorer.
+
+    ``page_occupancy``: expected live-page fraction of a paged engine —
+    prices decode HBM by live pages so the frontier sees paged savings."""
     shape = ShapeConfig("serve", max_len, slots, "decode")
-    return explore(cfg, shape, serving=True, max_loss=max_loss)
+    return explore(cfg, shape, serving=True, max_loss=max_loss,
+                   page_occupancy=page_occupancy)
 
 
 def percentiles(lat, ps=(50, 95, 99)):
@@ -65,12 +70,24 @@ def main(argv=None):
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--mesh", default="",
                    help="serve sharded, e.g. 2x4 -> (data=2, model=4)")
+    p.add_argument("--paged", action="store_true",
+                   help="paged page-pool caches with prefix reuse and the "
+                        "pool_pages Pliant knob (default: dense rings)")
+    p.add_argument("--page-size", type=int, default=8)
+    p.add_argument("--pool-pages", type=int, default=0,
+                   help="physical pages (0 = auto-size)")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="first N prompt tokens identical across requests "
+                        "(exercises the prefix cache under --paged)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
     params = api.init(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
-    table = serving_table(cfg, slots=args.slots, max_len=args.max_len)
+    occupancy = (min(1.0, (args.prompt_len + args.max_new) / args.max_len)
+                 if args.paged else None)
+    table = serving_table(cfg, slots=args.slots, max_len=args.max_len,
+                          page_occupancy=occupancy)
     names = [v.name for v in table.variants]
 
     mesh = None
@@ -92,13 +109,17 @@ def main(argv=None):
     eng = ServeEngine(cfg, batch_slots=args.slots, max_len=args.max_len,
                       params=params, table=table, runtime=runtime,
                       temperature=args.temperature, mesh=mesh,
-                      prefill_chunk=args.prefill_chunk, seed=args.seed)
+                      prefill_chunk=args.prefill_chunk, seed=args.seed,
+                      paged=args.paged, page_size=args.page_size,
+                      n_pages=args.pool_pages)
     if args.variant is not None:
         eng.set_variant(names.index(args.variant))
 
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(i, prompt=list(rng.integers(1, cfg.vocab_size,
-                                                args.prompt_len)),
+    shared = list(rng.integers(1, cfg.vocab_size,
+                               min(args.shared_prefix, args.prompt_len)))
+    reqs = [Request(i, prompt=shared + list(rng.integers(
+                        1, cfg.vocab_size, args.prompt_len - len(shared))),
                     max_new=args.max_new) for i in range(args.requests)]
     arrivals = (np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
                 if args.rate > 0 else np.zeros(args.requests))
@@ -122,13 +143,18 @@ def main(argv=None):
 
     # per-token latency seen by each request (inter-token gap; first token's
     # gap runs from arrival, so it includes queueing + admission prefill)
-    tok_lat, ttft = [], []
+    tok_lat, ttft, queue_delay = [], [], []
     for r in reqs:
         if not r.token_times:
             continue
         ts = [r.t_arrival or r.t_admit] + r.token_times
         tok_lat.extend(b - a for a, b in zip(ts, ts[1:]))
         ttft.append(r.token_times[0] - ts[0])
+        if r.t_arrival and r.t_admit:
+            # t_admit marks admission COMPLETION, so this is true queueing +
+            # prefill delay (recording the prefill START here used to
+            # under-count it by the whole admission)
+            queue_delay.append(r.t_admit - r.t_arrival)
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     pct = percentiles(tok_lat)
@@ -138,9 +164,19 @@ def main(argv=None):
     print(f"{done}/{len(reqs)} requests, {toks} tokens in {wall:.2f}s "
           f"({toks / max(wall, 1e-9):.1f} tok/s, rate={args.rate}/s)")
     ttft95 = float(np.percentile(ttft, 95)) if ttft else float("nan")
+    q95 = float(np.percentile(queue_delay, 95)) if queue_delay else 0.0
     print(f"per-token latency ms: p50={1e3 * pct[50]:.1f} "
           f"p95={1e3 * pct[95]:.1f} p99={1e3 * pct[99]:.1f}  "
-          f"ttft p95={1e3 * ttft95:.1f}")
+          f"ttft p95={1e3 * ttft95:.1f}  queue p95={1e3 * q95:.1f}")
+    if args.paged:
+        s = eng.pool.stats
+        looks = s["prefix_hits"] + s["prefix_misses"]
+        print(f"paged: pages={eng.pool.spec.n_pages} "
+              f"occupancy={eng.pool.occupancy():.2f} "
+              f"peak_used={s['peak_used']} "
+              f"prefix_hit_rate={s['prefix_hits'] / max(looks, 1):.2f} "
+              f"tokens_skipped={s['tokens_skipped']} "
+              f"reclaim_events={s['reclaim_events']}")
     if args.qos_target > 0:
         acts = [h["action"] for h in runtime.history if h["action"] != "hold"]
         print(f"qos: target={1e3 * args.qos_target:.1f}ms "

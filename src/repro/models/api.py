@@ -94,10 +94,17 @@ def make_inputs(cfg: ModelConfig, shape_or_specs, key=None):
 
 
 def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
-                    quantized: bool = False):
+                    quantized: bool = False, paged=None):
+    """``paged``: a ``serve.pages.PageSpec`` (or anything with page_size /
+    n_pages / max_pages) selects the paged cache layout."""
     if cfg.family == "encdec":
+        assert paged is None, "paged caches: decoder-only serving path"
         fn = lambda: encdec_mod.init_caches(cfg, batch, max_len,
                                             quantized=quantized)
+    elif paged is not None:
+        fn = lambda: lm_mod.init_paged_caches(
+            cfg, batch, paged.n_pages, paged.page_size, paged.max_pages,
+            quantized=quantized)
     else:
         fn = lambda: lm_mod.init_caches(cfg, batch, max_len,
                                         quantized=quantized)

@@ -158,8 +158,18 @@ def _banded(q, k, v, window: int, *, cap: float):
 
 # Global static scale of the int8-quantized serving KV cache (the ``kv_quant``
 # knob). Shared by decode, chunked prefill, and the engine's cache-dtype
-# conversion on a variant hot-swap — all three must round identically.
+# conversion on a variant hot-swap — all three must round identically, so
+# they all go through the two helpers below.
 KV_SCALE = 0.05
+
+
+def quantize_kv(x, scale: float = KV_SCALE):
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                    -127, 127).astype(jnp.int8)
+
+
+def dequantize_kv(x, dtype, scale: float = KV_SCALE):
+    return x.astype(dtype) * scale
 
 
 class KVCache(NamedTuple):
@@ -199,8 +209,8 @@ def decode_attention(params, x, position, cache: KVCache, cfg: ModelConfig, *,
     W = cache.k.shape[1]
     slot = cache.cursor % W
     if kv_scale:
-        k_store = jnp.clip(jnp.round(k / kv_scale), -127, 127).astype(jnp.int8)
-        v_store = jnp.clip(jnp.round(v / kv_scale), -127, 127).astype(jnp.int8)
+        k_store = quantize_kv(k, kv_scale)
+        v_store = quantize_kv(v, kv_scale)
     else:
         k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
     # one-hot masked write, NOT dynamic_update_slice: a DUS at a traced index
@@ -214,8 +224,10 @@ def decode_attention(params, x, position, cache: KVCache, cfg: ModelConfig, *,
     npos = jnp.where(wmask[None, :], position[:, None], cache.pos)
     new_cache = KVCache(nk, nv, npos, cache.cursor + 1)
 
-    kk = nk.astype(q.dtype) * kv_scale if kv_scale else nk.astype(q.dtype)
-    vv = nv.astype(q.dtype) * kv_scale if kv_scale else nv.astype(q.dtype)
+    kk = dequantize_kv(nk, q.dtype, kv_scale) if kv_scale else \
+        nk.astype(q.dtype)
+    vv = dequantize_kv(nv, q.dtype, kv_scale) if kv_scale else \
+        nv.astype(q.dtype)
     qg = q.reshape(B, 1, G, R, hd)
     valid = npos >= 0
     if window:
@@ -224,6 +236,168 @@ def decode_attention(params, x, position, cache: KVCache, cfg: ModelConfig, *,
     o = _sdpa(qg, kk, vv, mask=valid[:, None, None, None, :],
               cap=cfg.attn_softcap)
     return _merge(o, B, 1, cfg.q_dim) @ params["wo"], new_cache
+
+
+# ------------------------------------------------------------------- paged --
+
+class PagedKVCache(NamedTuple):
+    """Paged decode cache: entries live in a shared physical page pool and
+    each batch slot maps logical pages (position // page_size) to physical
+    pages through its block-table row. Physical page 0 is the reserved
+    null/trash page: unmapped block entries point at it and are masked out
+    of attention, and inactive decode rows scatter into it harmlessly.
+    Allocation is host-side (``serve.pages.PagePool``); the jitted paths
+    below only gather/scatter through the tables."""
+    kp: jax.Array         # (n_pages, page_size, G, hd) physical page pool
+    vp: jax.Array
+    ppos: jax.Array       # (n_pages, page_size) absolute positions, -1 empty
+    block: jax.Array      # (B, max_pages) int32 physical page ids, 0 = unmapped
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int, dtype=jnp.bfloat16,
+                     quantized: bool = False) -> PagedKVCache:
+    hd = cfg.resolved_head_dim
+    kdt = jnp.int8 if quantized else dtype
+    shape = (n_pages, page_size, cfg.n_kv_heads, hd)
+    return PagedKVCache(
+        kp=jnp.zeros(shape, kdt), vp=jnp.zeros(shape, kdt),
+        ppos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        block=jnp.zeros((batch, max_pages), jnp.int32))
+
+
+def _page_scatter(sel, write, buf, new):
+    """Scatter ``new`` rows into the page pool through a one-hot selection —
+    NOT a dynamic-index scatter: indices stay on the unsharded (page, offset)
+    dims as an elementwise one-hot, so a pool sharded over pages or heads
+    partitions cleanly (same GSPMD hazard class as the dense ring write).
+
+    sel: (R, n_pages, P) one-hot; write: (n_pages, P) = sel.any(0);
+    buf: (n_pages, P, ...); new: (R, ...). Colliding rows (inactive decode
+    slots all aimed at the trash page) sum to garbage that is never read.
+    """
+    scat = jnp.einsum("rnp,r...->np...", sel.astype(jnp.float32),
+                      new.astype(jnp.float32))
+    expand = (None,) * (buf.ndim - 2)
+    return jnp.where(write[(slice(None), slice(None)) + expand],
+                     scat.astype(buf.dtype), buf)
+
+
+def _gather_pages(cache: PagedKVCache, block, q_positions, *, window: int):
+    """Gather a block table's pages into contiguous K/V + validity mask.
+
+    block: (B, M); q_positions: (B, C) absolute query positions. Returns
+    (k (B, M*P, G, hd), v, valid (B, C, M*P)). Unmapped entries (physical
+    page 0) are masked regardless of the trash page's contents.
+    """
+    n_pages, P = cache.ppos.shape
+    B, M = block.shape
+    gk = jnp.take(cache.kp, block, axis=0).reshape(B, M * P, *cache.kp.shape[2:])
+    gv = jnp.take(cache.vp, block, axis=0).reshape(B, M * P, *cache.vp.shape[2:])
+    gpos = jnp.take(cache.ppos, block, axis=0).reshape(B, M * P)
+    mapped = jnp.repeat(block != 0, P, axis=1)            # (B, M*P)
+    valid = mapped[:, None, :] & (gpos[:, None, :] >= 0)
+    valid &= gpos[:, None, :] <= q_positions[:, :, None]
+    if window:
+        valid &= gpos[:, None, :] > q_positions[:, :, None] - window
+    return gk, gv, gpos, valid
+
+
+def paged_decode_attention(params, x, position, cache: PagedKVCache,
+                           cfg: ModelConfig, *, window: int = 0,
+                           kv_scale: float = 0.0):
+    """One-token decode against the paged pool. x: (B,1,D); position: (B,).
+
+    The new K/V entry scatters into the slot's private tail page (host-side
+    allocation guarantees it is mapped and unshared before the step runs);
+    attention gathers every mapped page through the block table and masks by
+    position/window — the paged sibling of ``decode_attention``.
+    """
+    B, one, D = x.shape
+    hd = cfg.resolved_head_dim
+    G, R = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], G, hd)
+    v = _split_heads(x @ params["wv"], G, hd)
+    q = apply_rope(q, position[:, None], cfg.rope_theta)
+    k = apply_rope(k, position[:, None], cfg.rope_theta)
+    if kv_scale:
+        k_store = quantize_kv(k, kv_scale)
+        v_store = quantize_kv(v, kv_scale)
+    else:
+        k_store = k.astype(cache.kp.dtype)
+        v_store = v.astype(cache.vp.dtype)
+    n_pages, P = cache.ppos.shape
+    phys = jnp.take_along_axis(cache.block, (position // P)[:, None],
+                               axis=1)[:, 0]              # (B,)
+    sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
+           & (jnp.arange(P)[None, None, :] == (position % P)[:, None, None]))
+    write = sel.any(axis=0)
+    nkp = _page_scatter(sel, write, cache.kp, k_store[:, 0])
+    nvp = _page_scatter(sel, write, cache.vp, v_store[:, 0])
+    nppos = _page_scatter(sel, write, cache.ppos, position)
+    new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
+
+    kk, vv, _, valid = _gather_pages(new_cache, cache.block, position[:, None],
+                                     window=window)
+    dq = (lambda a: dequantize_kv(a, q.dtype, kv_scale)) if kv_scale else \
+        (lambda a: a.astype(q.dtype))
+    qg = q.reshape(B, 1, G, R, hd)
+    o = _sdpa(qg, dq(kk), dq(vv), mask=valid[:, None, None],
+              cap=cfg.attn_softcap)
+    return _merge(o, B, 1, cfg.q_dim) @ params["wo"], new_cache
+
+
+def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
+                          cfg: ModelConfig, slot, *, window: int = 0,
+                          kv_scale: float = 0.0):
+    """C-token prompt-chunk step for ONE slot of the paged pool (chunked
+    admission). x: (1,C,D); positions: (1,C); ``slot`` is a traced scalar —
+    one executable per chunk length serves every slot and every chunk.
+
+    Scatters the chunk's K/V into the slot's (pre-allocated, private) pages,
+    then attends over every mapped page — the chunk's own entries included,
+    causally masked by position. Prefix-shared pages are simply already
+    present in the block row; chunks the engine skipped on a prefix hit were
+    never run.
+    """
+    from repro.dist.annotate import constrain_replicated
+    B, C, D = x.shape
+    hd = cfg.resolved_head_dim
+    G, R = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    # gather chunk Q/K/V before rope (0.4.x TP-sharded head_dim hazard,
+    # see chunk_decode_attention)
+    q = constrain_replicated(_split_heads(x @ params["wq"], cfg.n_heads, hd))
+    k = constrain_replicated(_split_heads(x @ params["wk"], G, hd))
+    v = constrain_replicated(_split_heads(x @ params["wv"], G, hd))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_scale:
+        k_store = quantize_kv(k, kv_scale)
+        v_store = quantize_kv(v, kv_scale)
+    else:
+        k_store = k.astype(cache.kp.dtype)
+        v_store = v.astype(cache.vp.dtype)
+    n_pages, P = cache.ppos.shape
+    brow = jnp.take(cache.block, slot, axis=0)            # (M,)
+    pos_c = positions[0]                                  # (C,)
+    phys = jnp.take(brow, pos_c // P)                     # (C,)
+    sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
+           & (jnp.arange(P)[None, None, :] == (pos_c % P)[:, None, None]))
+    write = sel.any(axis=0)
+    nkp = _page_scatter(sel, write, cache.kp, k_store[0])
+    nvp = _page_scatter(sel, write, cache.vp, v_store[0])
+    nppos = _page_scatter(sel, write, cache.ppos, pos_c)
+    new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
+
+    kk, vv, _, valid = _gather_pages(new_cache, brow[None], positions,
+                                     window=window)
+    dq = (lambda a: dequantize_kv(a, q.dtype, kv_scale)) if kv_scale else \
+        (lambda a: a.astype(q.dtype))
+    qg = q.reshape(B, C, G, R, hd)
+    o = _sdpa(qg, dq(kk), dq(vv), mask=valid[:, None, None],
+              cap=cfg.attn_softcap)
+    return _merge(o, B, C, cfg.q_dim) @ params["wo"], new_cache
 
 
 def chunk_decode_attention(params, x, positions, cache: KVCache,
@@ -251,8 +425,8 @@ def chunk_decode_attention(params, x, positions, cache: KVCache,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if kv_scale:
-        k_store = jnp.clip(jnp.round(k / kv_scale), -127, 127).astype(jnp.int8)
-        v_store = jnp.clip(jnp.round(v / kv_scale), -127, 127).astype(jnp.int8)
+        k_store = quantize_kv(k, kv_scale)
+        v_store = quantize_kv(v, kv_scale)
     else:
         k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
 
@@ -282,8 +456,8 @@ def chunk_decode_attention(params, x, positions, cache: KVCache,
     # attend over [prior ring entries; full chunk] so intra-chunk tokens are
     # visible even when C exceeds the ring (local layers attend pre-eviction,
     # exactly like the full-sequence banded path).
-    dq = lambda a: a.astype(q.dtype) * kv_scale if kv_scale else \
-        a.astype(q.dtype)
+    dq = (lambda a: dequantize_kv(a, q.dtype, kv_scale)) if kv_scale else \
+        (lambda a: a.astype(q.dtype))
     kk = jnp.concatenate([dq(cache.k), dq(k_store)], axis=1)
     vv = jnp.concatenate([dq(cache.v), dq(v_store)], axis=1)
     kv_pos = jnp.concatenate([cache.pos, positions], axis=1)   # (B, W+C)

@@ -98,6 +98,45 @@ def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
     return h, new_cache, aux
 
 
+def block_prefill_paged(kind: str, params, h, positions, cache,
+                        cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                        slot, ep_axis: Optional[str] = None, mesh=None):
+    """Paged sibling of ``block_prefill``: one slot's prompt chunk against
+    the shared page pool / per-slot Mamba rows. h: (1,C,D); ``slot`` traced.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    prec = knobs.matmul_precision
+    if kind == MAMBA:
+        # slice the slot's state row out, run the chunk, scatter it back —
+        # a masked select, keeping every leaf's batch dim intact for GSPMD
+        row = jax.tree.map(lambda x: jnp.take(x, slot[None], axis=0), cache)
+        y, row2 = mamba_mod.mamba_prefill(
+            params["mixer"], rms_norm(h, params["norm"], cfg.norm_eps),
+            row, cfg, precision=prec)
+        B = cache.state.shape[0]
+        smask = jnp.arange(B) == slot
+        new_cache = jax.tree.map(
+            lambda old, new: jnp.where(
+                smask.reshape((B,) + (1,) * (old.ndim - 1)), new, old),
+            cache, row2)
+        return h + y, new_cache, aux
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
+    y, new_cache = attn_mod.paged_chunk_attention(
+        params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
+        positions, cache, cfg, slot, window=window, kv_scale=kv_scale)
+    h = h + y
+    hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
+    if "moe" in params:
+        y, aux = moe_mod.moe(params["moe"], hn, cfg,
+                             top_k=knobs.topk_override, precision=prec,
+                             ep_axis=ep_axis, mesh=mesh)
+        h = h + y
+    else:
+        h = h + mlp_mod.mlp(params["mlp"], hn, precision=prec)
+    return h, new_cache, aux
+
+
 def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
                  knobs: ApproxKnobs = PRECISE, *,
                  ep_axis: Optional[str] = None, mesh=None,
@@ -112,9 +151,15 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
         return h + y, new_cache, aux
     window = cfg.window if kind == LOCAL_ATTN else 0
     kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
-    y, new_cache = attn_mod.decode_attention(
-        params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
-        position, cache, cfg, window=window, kv_scale=kv_scale)
+    hn = rms_norm(h, params["norm_attn"], cfg.norm_eps)
+    if isinstance(cache, attn_mod.PagedKVCache):
+        y, new_cache = attn_mod.paged_decode_attention(
+            params["attn"], hn, position, cache, cfg, window=window,
+            kv_scale=kv_scale)
+    else:
+        y, new_cache = attn_mod.decode_attention(
+            params["attn"], hn, position, cache, cfg, window=window,
+            kv_scale=kv_scale)
     h = h + y
     if enc_out is not None:
         h = h + attn_mod.attention(

@@ -230,6 +230,33 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return tuple(stack(one(kind)) for kind in cfg.pattern)
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_size: int, max_pages: int, dtype=jnp.bfloat16,
+                      quantized: bool = False):
+    """Paged sibling of ``init_caches``: attention positions get a
+    ``PagedKVCache`` over a shared physical page pool + per-slot block
+    tables (``serve.pages`` owns allocation); Mamba state stays per-slot.
+    Local-attention layers share the same full-length block tables and mask
+    by window at attention time — pages beyond the window are dead weight a
+    smarter allocator could free, but the mapping stays uniform.
+
+    Every leaf is group-stacked (axis 0 = layer groups) like ``init_caches``
+    so the decode scan consumes it unchanged; the block table is replicated
+    per group (a few KiB) to keep the pytree scan-uniform.
+    """
+    def one(kind):
+        if kind == MAMBA:
+            return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+        return attn_mod.init_paged_cache(cfg, batch, n_pages, page_size,
+                                         max_pages, dtype,
+                                         quantized=quantized)
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+            tree)
+    return tuple(stack(one(kind)) for kind in cfg.pattern)
+
+
 def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                 knobs: ApproxKnobs = PRECISE, *,
                 ep_axis: Optional[str] = None, mesh=None,

@@ -4,10 +4,22 @@ run under Pliant control.
 Each slot holds one request's progress; finished slots are refilled from the
 queue without stopping the batch ("continuous batching"). Admission is
 chunked prefill: the prompt streams through fixed-size full-sequence chunks
-(``serve.prefill.prefill_chunk``) into a single-request cache that is then
-slot-scattered into the batched caches (``serve.slots``) — no O(prompt)
-token-by-token warmup on the decode path, so 32k prompts admit in a handful
-of executable calls.
+(``serve.prefill``) — no O(prompt) token-by-token warmup on the decode path,
+so 32k prompts admit in a handful of executable calls.
+
+Two cache data models, selected by ``paged``:
+
+* **dense** (default): per-slot ``max_len`` rings; admission prefills a
+  single-request cache and slot-scatters it (``serve.slots``).
+* **paged**: a shared physical page pool + per-slot block tables
+  (``serve.pages.PagePool`` owns allocation host-side; the jitted paths in
+  ``models.attention`` gather/scatter through the tables). Admission maps
+  shared prompt-prefix pages copy-on-write — a prefix hit SKIPS those
+  prefill chunks entirely — and prefills the remainder straight into the
+  pool; completion returns pages to the free list. The pool budget is a
+  Pliant knob: when a ``PliantRuntime`` is attached its RECLAIM/RETURN
+  actions shrink/regrow ``pool_pages`` (``attach_reclaimer``), evicting
+  prefix-cache pages first and never touching live requests.
 
 Serving variants come from a ``VariantTable`` (the explorer's serving grid):
 every variant's decode executable is registered up front and the active one
@@ -20,20 +32,24 @@ controller's decisions, converting cache dtype when a swap crosses the
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.approx.knobs import ApproxKnobs, PRECISE
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import MAMBA, ModelConfig, ShapeConfig
 from repro.core.runtime import PliantRuntime
 from repro.core.variants import VariantTable
 from repro.models import lm
+from repro.models.attention import PagedKVCache
+from repro.models.mamba2 import MambaCache
+from repro.serve import pages as pages_mod
 from repro.serve import slots as slots_mod
 from repro.train import step as step_mod
 
@@ -46,7 +62,7 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     t_arrival: float = 0.0    # driver-set (open-loop client)
-    t_admit: float = 0.0
+    t_admit: float = 0.0      # admission COMPLETION (prefill done, slot live)
     token_times: List[float] = field(default_factory=list)
 
 
@@ -65,6 +81,10 @@ class ServeEngine:
     prefill_chunk: int = 16
     seed: int = 0
     cache_dtype: object = jnp.float32
+    paged: bool = False                # paged pool instead of dense rings
+    page_size: int = 8
+    n_pages: int = 0                   # 0 = auto (serve.pages.spec_for)
+    max_prefill_exes: int = 16         # LRU bound on admission executables
 
     def __post_init__(self):
         if self.runtime is not None:
@@ -72,6 +92,19 @@ class ServeEngine:
         self._variant_knobs = ([v.knobs for v in self.table.variants]
                                if self.table is not None else [self.knobs])
         self._active = 0
+        self.pool: Optional[pages_mod.PagePool] = None
+        self._page_spec = None
+        self.stores: List[pages_mod.CacheStore] = []
+        if self.paged:
+            self._page_spec = pages_mod.spec_for(
+                self.batch_slots, self.max_len, self.page_size, self.n_pages)
+            self.pool = pages_mod.PagePool(self._page_spec, self.batch_slots)
+            # one store per cache kind behind the shared CacheStore protocol:
+            # the page pool for attention state, the trivial per-slot store
+            # for SSM state — the engine frees every kind uniformly
+            self.stores = [self.pool]
+            if MAMBA in self.cfg.pattern:
+                self.stores.append(pages_mod.MambaSlotStore())
         self._param_sh = self._cache_sh = None
         if self.mesh is not None:
             from repro.dist import sharding as dist_sharding
@@ -79,8 +112,8 @@ class ServeEngine:
                 self.cfg, self.mesh, self.policy)
             shp = ShapeConfig("serve", self.max_len, self.batch_slots,
                               "decode")
-            self._cache_sh, _ = dist_sharding.cache_shardings(self.cfg, shp,
-                                                              self.mesh)
+            self._cache_sh, _ = dist_sharding.cache_shardings(
+                self.cfg, shp, self.mesh, paged=self._page_spec)
             with self._ctx():
                 self.params = jax.device_put(self.params, self._param_sh)
 
@@ -91,19 +124,30 @@ class ServeEngine:
         self._decodes = {
             i: self._lower_decode(step_mod.make_serve_step(self.cfg, k))
             for i, k in enumerate(self._variant_knobs)}
-        self._prefills: Dict[Tuple[int, int], object] = {}
+        # admission executables, keyed by (knobs, chunk len, paged) — NOT by
+        # variant index, so table entries with identical admission knobs
+        # share one compiled chunk cell — and LRU-bounded
+        self._prefills: "collections.OrderedDict[Tuple, object]" = \
+            collections.OrderedDict()
         self._insert = jax.jit(slots_mod.insert_request)
 
         self.caches = self._init_caches(self.active_knobs.kv_quant)
         self.positions = np.zeros(self.batch_slots, np.int32)
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
-        self.pending: List[Request] = []
+        self.pending: Deque[Request] = collections.deque()
         self.cur_tokens = np.zeros(self.batch_slots, np.int32)
         self.step_latencies: List[float] = []
         self.admit_latencies: List[float] = []
         self.swaps: List[Tuple[int, int]] = []   # (step index, variant index)
         self._token_lat: List[float] = []        # unflushed monitor samples
         self._rng = np.random.default_rng(self.seed)
+        if (self.paged and self.runtime is not None
+                and self.runtime.reshard_fn is None):
+            # expose pool_pages as the runtime's reclaimable knob: RECLAIM
+            # shrinks the page budget (prefix cache evicted first), RETURN
+            # grows it back
+            self.runtime.attach_reclaimer(self.pool.set_reclaimed,
+                                          max_reclaim=self.pool.max_quanta)
 
     # ------------------------------------------------------------ variants --
 
@@ -117,7 +161,7 @@ class ServeEngine:
 
     def set_variant(self, idx: int) -> None:
         """Hot-swap the decode executable at a step boundary, converting the
-        KV rings when the swap crosses the ``kv_quant`` boundary."""
+        KV rings/pages when the swap crosses the ``kv_quant`` boundary."""
         if idx == self._active:
             return
         old, new = self.active_knobs, self._variant_knobs[idx]
@@ -127,8 +171,25 @@ class ServeEngine:
                     self.caches, new.kv_quant, self.cache_dtype)
                 if self._cache_sh is not None:
                     self.caches = jax.device_put(self.caches, self._cache_sh)
+        if self.pool is not None and old != new:
+            # prefix entries are tagged by the knobs that computed them; a
+            # swap re-encodes the pool in place, so drop the stale index
+            self.pool.flush_prefixes()
         self._active = idx
         self.swaps.append((len(self.step_latencies), idx))
+
+    def retire_variant(self, idx: int) -> None:
+        """Drop a retired table entry's executables. Admission cells are
+        knobs-keyed, so they survive while any live variant shares the
+        knobs and are evicted with the last user."""
+        assert idx != self._active, "cannot retire the active variant"
+        self._decodes.pop(idx, None)
+        kn = self._variant_knobs[idx]
+        if any(k == kn for i, k in enumerate(self._variant_knobs)
+               if i != idx and i in self._decodes):
+            return
+        for key in [k for k in self._prefills if k[0] == kn]:
+            del self._prefills[key]
 
     def _lower_decode(self, step):
         if self.mesh is None:
@@ -139,16 +200,31 @@ class ServeEngine:
                        out_shardings=(None, self._cache_sh))
 
     def _prefill_exe(self, chunk_len: int):
-        key = (self._active, chunk_len)
+        key = (self.active_knobs, chunk_len, self.paged)
         fn = self._prefills.get(key)
-        if fn is None:
+        if fn is not None:
+            self._prefills.move_to_end(key)
+            return fn
+        if self.paged:
+            step = step_mod.make_paged_admission_step(self.cfg,
+                                                      self.active_knobs)
+            if self.mesh is None:
+                fn = jax.jit(step)
+            else:
+                fn = jax.jit(step,
+                             in_shardings=(self._param_sh, None, None,
+                                           self._cache_sh, None),
+                             out_shardings=(None, self._cache_sh))
+        else:
             step = step_mod.make_admission_step(self.cfg, self.active_knobs)
             if self.mesh is None:
                 fn = jax.jit(step)
             else:
                 fn = jax.jit(step, in_shardings=(self._param_sh, None, None,
                                                  None))
-            self._prefills[key] = fn
+        self._prefills[key] = fn
+        while len(self._prefills) > self.max_prefill_exes:
+            self._prefills.popitem(last=False)
         return fn
 
     # ------------------------------------------------------------- helpers --
@@ -160,8 +236,15 @@ class ServeEngine:
         return compat.set_mesh(self.mesh)
 
     def _init_caches(self, quantized: bool):
-        caches = lm.init_caches(self.cfg, self.batch_slots, self.max_len,
-                                dtype=self.cache_dtype, quantized=quantized)
+        if self.paged:
+            sp = self._page_spec
+            caches = lm.init_paged_caches(
+                self.cfg, self.batch_slots, sp.n_pages, sp.page_size,
+                sp.max_pages, dtype=self.cache_dtype, quantized=quantized)
+        else:
+            caches = lm.init_caches(self.cfg, self.batch_slots, self.max_len,
+                                    dtype=self.cache_dtype,
+                                    quantized=quantized)
         if self._cache_sh is not None:
             with self._ctx():
                 caches = jax.device_put(caches, self._cache_sh)
@@ -179,11 +262,73 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
+    # ------------------------------------------------------ paged plumbing --
+
+    def _free_slot(self, slot: int) -> bool:
+        """Release a finished request's cache residency across every store.
+        Returns True when device-visible mapping state changed."""
+        dirty = False
+        for store in self.stores:
+            dirty |= store.free_slot(slot)
+        return dirty
+
+    def _push_blocks(self) -> None:
+        """Mirror the host block tables into the device caches (host-side
+        allocation between steps; jitted steps only read the tables) and
+        scrub freed pages' stale positions before they can be reused."""
+        bt = jnp.asarray(self.pool.blocks)
+        scrub = self.pool.drain_scrub()
+        pids = jnp.asarray(scrub, jnp.int32) if scrub else None
+
+        def one(c):
+            if isinstance(c, PagedKVCache):
+                ppos = c.ppos if pids is None else \
+                    c.ppos.at[:, pids].set(-1)
+                return c._replace(
+                    ppos=ppos,
+                    block=jnp.broadcast_to(bt[None], c.block.shape))
+            return c
+
+        self.caches = tuple(one(c) for c in self.caches)
+        if self._cache_sh is not None:
+            with self._ctx():
+                self.caches = jax.device_put(self.caches, self._cache_sh)
+
+    def _mamba_snapshot(self, slot: int):
+        """Host copy of the slot's SSM state rows (prefix-boundary snapshot
+        carried by the prefix index; None for attention-only archs)."""
+        snap = {}
+        for ci, c in enumerate(self.caches):
+            if isinstance(c, MambaCache):
+                snap[ci] = MambaCache(*(np.asarray(x[:, slot]) for x in c))
+        return snap or None
+
+    def _set_mamba_rows(self, slot: int, snap) -> None:
+        """Seed the slot's SSM rows for a fresh admission: the prefix-entry
+        snapshot on a hit, zeros otherwise — the previous tenant's state must
+        never leak into a new request (the dense path gets this for free
+        from its fresh single-request cache + insert)."""
+        if not any(isinstance(c, MambaCache) for c in self.caches):
+            return
+        caches = list(self.caches)
+        for ci, c in enumerate(self.caches):
+            if not isinstance(c, MambaCache):
+                continue
+            row = snap.get(ci) if snap else None
+            caches[ci] = MambaCache(*(
+                x.at[:, slot].set(jnp.zeros_like(x[:, slot]) if r is None
+                                  else jnp.asarray(r))
+                for x, r in zip(c, row or (None,) * len(c))))
+        self.caches = tuple(caches)
+        if self._cache_sh is not None:
+            with self._ctx():
+                self.caches = jax.device_put(self.caches, self._cache_sh)
+
     # ----------------------------------------------------------- admission --
 
     def _chunked_prefill(self, prompt: List[int]):
-        """Stream the prompt through fixed-size chunks into a fresh
-        single-request cache. Returns (last-token logits, caches)."""
+        """Dense path: stream the prompt through fixed-size chunks into a
+        fresh single-request cache. Returns (last-token logits, caches)."""
         knobs = self.active_knobs
         caches = lm.init_caches(self.cfg, 1, self.max_len,
                                 dtype=self.cache_dtype,
@@ -199,28 +344,90 @@ class ServeEngine:
                 start += C
         return logits, caches
 
+    def _paged_prefill(self, slot: int, req: Request):
+        """Paged path: map pages (sharing registered prompt prefixes — a hit
+        skips those chunks entirely), prefill the remainder straight into
+        the pool, and register the longest full-page prefix with its SSM
+        boundary snapshot. Returns last-token logits, or None when the pool
+        is over budget (request stays pending)."""
+        prompt = req.prompt
+        plan = self.pool.admit(slot, prompt, self.active_knobs)
+        if plan is None:
+            return None
+        self._push_blocks()
+        snap = plan.entry.mamba if (plan.shared_tokens and plan.entry) \
+            else None
+        self._set_mamba_rows(slot, snap)
+        toks = np.asarray(prompt, np.int32)
+        S = len(prompt)
+        state = {"start": plan.shared_tokens, "logits": None}
+        sl = jnp.asarray(slot, jnp.int32)
+
+        def run_to(end: int) -> None:
+            with self._ctx():
+                while state["start"] < end:
+                    start = state["start"]
+                    C = min(self.prefill_chunk, end - start)
+                    state["logits"], self.caches = self._prefill_exe(C)(
+                        self.params,
+                        jnp.asarray(toks[None, start:start + C]),
+                        jnp.asarray(start, jnp.int32), self.caches, sl)
+                    state["start"] += C
+
+        has_mamba = any(isinstance(c, MambaCache) for c in self.caches)
+        if has_mamba:
+            # pause prefill at each boundary so its SSM snapshot matches
+            for b in plan.register:
+                run_to(b)
+                self.pool.register_prefix(slot, prompt, self.active_knobs, b,
+                                          mamba=self._mamba_snapshot(slot))
+            run_to(S)
+        else:
+            # attention-only: pages are position-addressed, registration is
+            # pure bookkeeping — no need to fragment the chunk stream
+            run_to(S)
+            for b in plan.register:
+                self.pool.register_prefix(slot, prompt, self.active_knobs, b)
+        # lookup caps sharing at len(prompt)-1 tokens, so at least one chunk
+        # always ran and produced the sampling logits
+        assert state["logits"] is not None
+        return state["logits"]
+
     def _admit(self) -> None:
         for i in range(self.batch_slots):
             while self.slots[i] is None and self.pending:
-                req = self.pending.pop(0)
+                req = self.pending[0]
                 assert len(req.prompt) <= self.max_len, \
                     (len(req.prompt), self.max_len)
+                if self.paged:
+                    assert len(req.prompt) + req.max_new <= \
+                        self._page_spec.max_pages * self.page_size, \
+                        "paged serving does not ring-wrap: need " \
+                        "max_len >= prompt + max_new"
                 t0 = time.perf_counter()
-                logits, rcaches = self._chunked_prefill(req.prompt)
-                with self._ctx():
-                    self.caches = self._insert(self.caches, rcaches, i)
-                    if self._cache_sh is not None:
-                        self.caches = jax.device_put(self.caches,
-                                                     self._cache_sh)
+                if self.paged:
+                    logits = self._paged_prefill(i, req)
+                    if logits is None:       # pool over budget: stop admitting
+                        return
+                else:
+                    logits, rcaches = self._chunked_prefill(req.prompt)
+                    with self._ctx():
+                        self.caches = self._insert(self.caches, rcaches, i)
+                        if self._cache_sh is not None:
+                            self.caches = jax.device_put(self.caches,
+                                                         self._cache_sh)
+                self.pending.popleft()
                 tok = self._sample(np.asarray(logits)[0])
                 now = time.perf_counter()
                 self.admit_latencies.append(now - t0)
                 self._token_lat.append(now - t0)   # TTFT sample
-                req.t_admit = t0
+                req.t_admit = now                  # admission COMPLETION
                 req.out.append(tok)
                 req.token_times.append(now)
                 if len(req.out) >= req.max_new:
                     req.done = True                # 1-token request: no slot
+                    if self.paged and self._free_slot(i):
+                        self._push_blocks()
                     continue
                 self.positions[i] = len(req.prompt)
                 self.cur_tokens[i] = tok
@@ -235,6 +442,16 @@ class ServeEngine:
         if all(s is None for s in self.slots):
             self._control_tick()       # flush TTFT samples of 1-token admits
             return
+        if self.paged:
+            # map each live slot's write page before the step scatters to it
+            # (live growth bypasses the reclaim limit — see serve.pages)
+            dirty = False
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    dirty |= self.pool.ensure_decode_page(
+                        i, int(self.positions[i]))
+            if dirty:
+                self._push_blocks()
         t0 = time.perf_counter()
         with self._ctx():
             toks = jnp.asarray(self.cur_tokens)[:, None]
@@ -246,6 +463,7 @@ class ServeEngine:
         self.step_latencies.append(dt)
         now = time.perf_counter()
         n_emitted = 0
+        freed = False
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -258,6 +476,10 @@ class ServeEngine:
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.slots[i] = None            # slot freed: continuous batch
+                if self.paged:
+                    freed |= self._free_slot(i)
+        if freed:
+            self._push_blocks()
         self._token_lat.extend([dt] * n_emitted)
         self._control_tick()
 

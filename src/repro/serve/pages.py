@@ -1,0 +1,385 @@
+"""Device-resident paged cache pool: host-side allocator, block tables,
+copy-on-write prefix sharing, and the Pliant-reclaimable page budget.
+
+The pool replaces the dense per-slot rings of the serving engine: KV entries
+live in a shared physical page pool (``models.attention.PagedKVCache``) and
+each slot maps logical pages (position // page_size) to physical pages
+through a block table. This module owns everything HOST-side about that
+mapping — allocation never happens inside a jitted step:
+
+* **Free-list allocator.** Physical page 0 is the reserved null/trash page
+  (unmapped block-table entries point at it and are masked out of attention;
+  inactive decode rows scatter into it harmlessly). Pages are refcounted:
+  a page is owned by every slot whose block table maps it PLUS the prefix
+  index entries that pin it, and returns to the free list at refcount 0.
+
+* **Prefix index (copy-on-write sharing).** Admission registers the longest
+  full-page prompt prefix under a key of (knobs, token tuple); a later
+  request with the same prefix maps those pages directly into its block
+  table (refcount bump — no copy, no recompute) and skips the corresponding
+  prefill chunks entirely. Shared pages are immutable by construction: only
+  FULL prompt pages are ever shared, lookups cap at ``len(prompt) - 1``
+  tokens so at least one token always re-prefills into a private tail page,
+  and decode writes only ever land in private pages — so "copy-on-write"
+  never needs a write fault, the tail is simply never shared. For archs with
+  Mamba layers the entry also carries the host snapshot of the per-slot SSM
+  state at the prefix boundary, restored on a hit.
+
+* **Reclaimable budget (the ``pool_pages`` Pliant knob).** ``set_reclaimed``
+  shrinks the allocatable-page limit in quanta; shrinking evicts prefix
+  index entries (LRU) — the approximation-tolerant pages, in Pliant terms —
+  and blocks NEW admissions while over budget, but never touches pages owned
+  by live requests (growth for an in-flight decode is always honored), so a
+  shrink/regrow round-trip cannot corrupt an in-flight request. The serve
+  engine wires this to ``PliantRuntime`` RECLAIM/RETURN actions.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PageSpec:
+    """Static shape of a paged cache pool (the engine's cache-spec)."""
+    page_size: int       # tokens per page
+    n_pages: int         # physical pages, INCLUDING the reserved null page 0
+    max_pages: int       # logical pages per slot (ceil(max_len / page_size))
+
+    @property
+    def usable(self) -> int:
+        return self.n_pages - 1
+
+
+def spec_for(batch_slots: int, max_len: int, page_size: int = 8,
+             n_pages: int = 0) -> PageSpec:
+    """Default pool sizing: every slot can hold a full ``max_len`` sequence,
+    plus one sequence's worth of slack for the prefix cache. ``n_pages`` is
+    rounded up to a multiple of 8 so the physical page dim stays shardable
+    (``dist.sharding.cache_shardings``)."""
+    max_pages = -(-max_len // page_size)
+    if n_pages <= 0:
+        n_pages = 1 + (batch_slots + 1) * max_pages
+    n_pages = -(-n_pages // 8) * 8
+    return PageSpec(page_size, n_pages, max_pages)
+
+
+class CacheStore:
+    """Minimal per-slot cache-residency protocol the engine drives.
+
+    ``PagePool`` implements it for paged attention state; ``MambaSlotStore``
+    for the dense per-slot SSM state (which has nothing to allocate — one
+    row per slot, always resident — but sits behind the same surface so the
+    engine frees/queries every cache kind uniformly)."""
+
+    def free_slot(self, slot: int) -> bool:
+        """Release slot-owned residency. Returns True if device-visible
+        mapping state changed (the engine must re-push block tables)."""
+        raise NotImplementedError
+
+    def occupancy(self) -> float:
+        raise NotImplementedError
+
+
+class MambaSlotStore(CacheStore):
+    """Per-slot dense state store: state travels with the slot row, so
+    freeing is a no-op (the next admission overwrites it)."""
+
+    def free_slot(self, slot: int) -> bool:
+        return False
+
+    def occupancy(self) -> float:
+        return 1.0
+
+
+@dataclass
+class PrefixEntry:
+    pages: Tuple[int, ...]       # physical pages of the shared prefix
+    n_tokens: int                # page-aligned prefix length
+    mamba: Any = None            # host SSM-state snapshot at the boundary
+    last_use: int = 0
+    hits: int = 0
+
+
+@dataclass
+class AdmitPlan:
+    shared_tokens: int           # prompt tokens whose prefill is skipped
+    entry: Optional[PrefixEntry]
+    register: List[int]          # page boundaries to snapshot+register
+
+
+class PagePool(CacheStore):
+    def __init__(self, spec: PageSpec, batch_slots: int,
+                 reclaim_quantum: int = 0, max_register_pages: int = 64):
+        self.spec = spec
+        self.batch_slots = batch_slots
+        # bound on registered boundaries per prompt: caps index growth, the
+        # per-entry pages tuples, and (hybrid archs) the per-boundary SSM
+        # snapshots an admission pauses for — prompts share at most this
+        # many leading pages (stats["register_capped"] counts the overflow)
+        self.max_register_pages = max_register_pages
+        self.free: collections.deque = collections.deque(
+            range(1, spec.n_pages))
+        self.ref = np.zeros(spec.n_pages, np.int32)
+        self.blocks = np.zeros((batch_slots, spec.max_pages), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.index: Dict[tuple, PrefixEntry] = {}
+        self.quantum = reclaim_quantum or spec.max_pages
+        self.reclaimed = 0
+        self.scrub_pending: List[int] = []   # fully-freed pages: stale device
+        self._clock = 0                      # ppos must be cleared before reuse
+        self.stats: Dict[str, Any] = dict(
+            allocs=0, frees=0, prefix_hits=0, prefix_misses=0,
+            prefix_registered=0, prefix_evicted=0, tokens_skipped=0,
+            blocked_admissions=0, reclaim_events=0, over_limit_allocs=0,
+            register_capped=0, peak_used=0)
+
+    # --------------------------------------------------------- accounting --
+
+    @property
+    def used(self) -> int:
+        return self.spec.usable - len(self.free)
+
+    @property
+    def limit(self) -> int:
+        return max(self.spec.usable - self.reclaimed * self.quantum, 0)
+
+    @property
+    def max_quanta(self) -> int:
+        """Reclaim budget exposed to the controller: the slack above one
+        live sequence per slot, in quanta (>= 1 so the knob always exists)."""
+        slack = self.spec.usable - self.batch_slots * self.spec.max_pages
+        return max(1, slack // self.quantum)
+
+    def occupancy(self) -> float:
+        return self.used / max(self.spec.usable, 1)
+
+    def live_slot_pages(self) -> int:
+        return sum(len(p) for p in self.slot_pages)
+
+    # --------------------------------------------------------- allocation --
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _alloc(self, *, for_live: bool = False) -> Optional[int]:
+        """Pop a free physical page (refcount 1). Evicts LRU prefix entries
+        under pressure. ``for_live`` allocations (decode growth of an
+        in-flight request) may exceed the reclaim limit — reclamation must
+        never corrupt a live request."""
+        if not for_live:
+            while self.used >= self.limit and self.index:
+                self._evict_lru()
+            if self.used >= self.limit:
+                return None
+        while not self.free and self.index:
+            self._evict_lru()
+        if not self.free:
+            return None
+        if self.used >= self.limit:
+            self.stats["over_limit_allocs"] += 1
+        pid = self.free.popleft()
+        self.ref[pid] = 1
+        self.stats["allocs"] += 1
+        self.stats["peak_used"] = max(self.stats["peak_used"], self.used)
+        return pid
+
+    def _deref(self, pid: int) -> None:
+        self.ref[pid] -= 1
+        assert self.ref[pid] >= 0, pid
+        if self.ref[pid] == 0:
+            self.free.append(pid)
+            self.scrub_pending.append(pid)
+            self.stats["frees"] += 1
+
+    def drain_scrub(self) -> List[int]:
+        """Pages freed since the last drain. Their device-side ``ppos`` rows
+        still hold the previous tenant's positions, which would alias as
+        valid entries for a new tenant at a different logical page — the
+        engine sets them to -1 before the next jitted step."""
+        out, self.scrub_pending = self.scrub_pending, []
+        return out
+
+    # ------------------------------------------------------- prefix index --
+
+    def _chain_keys(self, prompt: Sequence[int], tag,
+                    n_pages: int) -> List[int]:
+        """Chained per-page index keys: ``key_i = hash((key_{i-1}, page_i
+        tokens))`` — O(1) index storage per boundary instead of the full
+        token tuple (which made a 32k prompt cost O(S^2/P) key memory), the
+        vLLM block-hash scheme. 64-bit collisions are accepted as
+        negligible."""
+        P = self.spec.page_size
+        keys, prev = [], hash((id(type(self)), tag))
+        for i in range(n_pages):
+            prev = hash((prev,
+                         tuple(int(t) for t in prompt[i * P:(i + 1) * P])))
+            keys.append(prev)
+        return keys
+
+    def lookup_prefix(self, prompt: Sequence[int], tag
+                      ) -> Tuple[int, Optional[PrefixEntry]]:
+        """Deepest registered full-page prefix of ``prompt`` under ``tag``,
+        capped at ``len(prompt) - 1`` tokens so admission always re-prefills
+        at least the last token (its logits seed sampling). Pure lookup:
+        hit/LRU bookkeeping happens in ``admit`` only when the admission
+        commits, so a blocked request retried every engine step does not
+        inflate the hit-rate metrics or refresh the entry's LRU clock."""
+        P = self.spec.page_size
+        n = min((len(prompt) - 1) // P, self.max_register_pages)
+        best: Tuple[int, Optional[PrefixEntry]] = (0, None)
+        for i, key in enumerate(self._chain_keys(prompt, tag, n)):
+            e = self.index.get(key)
+            if e is not None:          # chains may have gaps (eviction/cap):
+                best = ((i + 1) * P, e)  # deepest present boundary wins
+        return best
+
+    def register_prefix(self, slot: int, prompt: Sequence[int], tag,
+                        n_tokens: int, mamba=None) -> None:
+        """Pin the slot's first ``n_tokens // page_size`` pages as a shared
+        prefix (idempotent per key; boundaries past ``max_register_pages``
+        are not indexed)."""
+        P = self.spec.page_size
+        assert n_tokens % P == 0 and n_tokens > 0, n_tokens
+        if n_tokens // P > self.max_register_pages:
+            self.stats["register_capped"] += 1
+            return
+        key = self._chain_keys(prompt, tag, n_tokens // P)[-1]
+        if key in self.index:
+            return
+        pages = tuple(int(p) for p in self.blocks[slot, : n_tokens // P])
+        assert all(p != 0 for p in pages), (slot, pages)
+        for p in pages:
+            self.ref[p] += 1
+        self.index[key] = PrefixEntry(pages, n_tokens, mamba,
+                                      last_use=self._tick())
+        self.stats["prefix_registered"] += 1
+
+    def _evict_lru(self) -> None:
+        key = min(self.index, key=lambda k: self.index[k].last_use)
+        for p in self.index.pop(key).pages:
+            self._deref(p)
+        self.stats["prefix_evicted"] += 1
+
+    def flush_prefixes(self) -> None:
+        """Drop every prefix entry (variant hot-swaps re-encode the pool in
+        place, so cached prefixes no longer match any knob tag)."""
+        while self.index:
+            self._evict_lru()
+
+    # ----------------------------------------------------------- slot ops --
+
+    def admit(self, slot: int, prompt: Sequence[int], tag
+              ) -> Optional[AdmitPlan]:
+        """Build the slot's block table for ``prompt``: map shared prefix
+        pages (refcount bump) and allocate private pages for the remainder.
+        Returns None — with no state changed — when the pool is over budget
+        (the request stays pending)."""
+        P = self.spec.page_size
+        assert not self.slot_pages[slot], f"slot {slot} not freed"
+        assert len(prompt) <= self.spec.max_pages * P, (len(prompt), self.spec)
+        if -(-len(prompt) // P) > self.spec.usable:
+            # structurally impossible — retrying every step would spin the
+            # engine through max_steps with the request silently unserved
+            raise RuntimeError(
+                f"prompt needs {-(-len(prompt) // P)} pages but the pool has "
+                f"{self.spec.usable} usable; size n_pages up")
+        shared, entry = self.lookup_prefix(prompt, tag)
+        if shared:
+            # pin the hit pages BEFORE allocating fresh ones: under pressure
+            # _alloc's LRU eviction may drop the hit entry itself, and
+            # without the slot's ref its pages would be freed (and scrubbed)
+            # while this admission is about to map them
+            for p in entry.pages:
+                self.ref[p] += 1
+        n_new = -(-len(prompt) // P) - shared // P
+        fresh = []
+        for _ in range(n_new):
+            pid = self._alloc()
+            if pid is None:
+                for p in fresh:
+                    self._deref(p)
+                if shared:
+                    for p in entry.pages:
+                        self._deref(p)
+                self.stats["blocked_admissions"] += 1
+                return None
+            fresh.append(pid)
+        if shared:
+            entry.hits += 1
+            entry.last_use = self._tick()
+            self.stats["prefix_hits"] += 1
+        else:
+            self.stats["prefix_misses"] += 1
+        row = self.blocks[slot]
+        row[:] = 0
+        if shared:
+            row[: shared // P] = entry.pages
+        row[shared // P: shared // P + n_new] = fresh
+        self.slot_pages[slot] = [int(p) for p in row[: shared // P + n_new]]
+        self.stats["tokens_skipped"] += shared
+        # register every unregistered full-page boundary beyond the shared
+        # prefix (bounded by max_register_pages) — a future prompt sharing
+        # only the first k pages must still hit (the target workload is
+        # shared prefix + divergent tails)
+        top = min(len(prompt) // P, self.max_register_pages) * P
+        keys = self._chain_keys(prompt, tag, top // P)
+        reg = [b for b in range(shared + P, top + 1, P)
+               if keys[b // P - 1] not in self.index]
+        if len(prompt) // P > self.max_register_pages:
+            self.stats["register_capped"] += 1
+        return AdmitPlan(shared, entry, reg)
+
+    def ensure_decode_page(self, slot: int, position: int) -> bool:
+        """Map the page holding ``position`` before a decode write lands
+        there. Returns True when the block table changed (engine re-pushes).
+        Live-request growth bypasses the reclaim limit by design."""
+        P = self.spec.page_size
+        lp = position // P
+        if lp >= self.spec.max_pages:
+            raise RuntimeError(
+                f"slot {slot}: position {position} overflows the block table "
+                f"({self.spec.max_pages} pages x {P}); paged serving does not "
+                f"ring-wrap — size max_len >= prompt + max_new")
+        if self.blocks[slot, lp] != 0:
+            return False
+        pid = self._alloc(for_live=True)
+        if pid is None:
+            raise RuntimeError("page pool exhausted mid-decode "
+                               f"(used={self.used}/{self.spec.usable})")
+        self.blocks[slot, lp] = pid
+        self.slot_pages[slot].append(pid)
+        return True
+
+    def free_slot(self, slot: int) -> bool:
+        if not self.slot_pages[slot]:
+            return False
+        for p in self.slot_pages[slot]:
+            self._deref(p)
+        self.slot_pages[slot] = []
+        self.blocks[slot] = 0
+        return True
+
+    # ------------------------------------------------------------ reclaim --
+
+    def set_reclaimed(self, k: int) -> None:
+        """Actuate the ``pool_pages`` knob: budget = usable - k * quantum.
+        Shrinking evicts prefix entries until under budget (live pages are
+        untouchable); both directions are recorded as reclaim events."""
+        k = max(0, min(int(k), self.max_quanta))
+        if k == self.reclaimed:
+            return
+        grow = k < self.reclaimed
+        self.reclaimed = k
+        evicted = 0
+        while self.used > self.limit and self.index:
+            self._evict_lru()
+            evicted += 1
+        self.stats["reclaim_events"] += 1
+        self.stats.setdefault("reclaim_log", []).append(dict(
+            action="grow" if grow else "shrink", reclaimed=k,
+            limit=self.limit, used=self.used, evicted=evicted))

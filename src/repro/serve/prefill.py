@@ -123,6 +123,39 @@ def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
     return logits_fn(params, h[:, -1], cfg), new_caches
 
 
+def paged_prefill_chunk(params, tokens, start, caches, slot,
+                        cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+    """One prompt chunk for ONE slot of the paged engine caches.
+
+    tokens: (1, C); start: traced scalar absolute position; slot: traced
+    scalar batch row. Unlike ``prefill_chunk`` (which fills a fresh
+    single-request cache that is then slot-scattered), this writes straight
+    into the batched page pool through the slot's block table — there is no
+    insert step, and prefix-shared pages are simply already mapped. Returns
+    (last-token logits (1,V) fp32, advanced caches).
+    """
+    from repro.models.blocks import block_prefill_paged
+    h = params["embed"][tokens]
+    B, C, D = h.shape
+    positions = start + jnp.broadcast_to(jnp.arange(C), (B, C))
+    shared = params.get("shared")
+
+    def group_body(h, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for j, kind in enumerate(cfg.pattern):
+            p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
+            h, nc, _ = block_prefill_paged(kind, p, h, positions,
+                                           group_caches[j], cfg, knobs,
+                                           slot=slot)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    h, new_caches = jax.lax.scan(group_body, h, (params["groups"], caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return logits_fn(params, h[:, -1], cfg), new_caches
+
+
 def prefill_with_cache(params, tokens, cfg: ModelConfig, max_len: int,
                        knobs: ApproxKnobs = PRECISE):
     """tokens: (B, S) -> (last-token logits (B,V) fp32, decode caches).

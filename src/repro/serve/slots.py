@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import KVCache, KV_SCALE
+from repro.models.attention import (KVCache, KV_SCALE, PagedKVCache,
+                                    dequantize_kv, quantize_kv)
 from repro.models.mamba2 import MambaCache
 
 
@@ -46,19 +47,28 @@ def convert_caches(caches, kv_quant: bool, dtype=jnp.float32):
 
     int8 -> ``dtype`` when leaving a quantized variant, ``dtype`` -> int8 when
     entering one (shared static ``KV_SCALE``, the same rounding decode and
-    chunked prefill apply). Positions, cursors, and Mamba state carry over —
-    decode continues mid-request across the swap.
+    chunked prefill apply). Positions, cursors, block tables, and Mamba state
+    carry over — decode continues mid-request across the swap. Paged pools
+    convert every physical page in place (shared prefix pages included, so
+    all sharers stay consistent); the engine flushes the knob-tagged prefix
+    index on a swap since re-encoded pages match no registered tag.
     """
+    q = quantize_kv
+    dq = lambda x: dequantize_kv(x, dtype)
+
     def one(c):
-        if not isinstance(c, KVCache):
+        if isinstance(c, KVCache):
+            if kv_quant and c.k.dtype != jnp.int8:
+                return c._replace(k=q(c.k), v=q(c.v))
+            if not kv_quant and c.k.dtype == jnp.int8:
+                return c._replace(k=dq(c.k), v=dq(c.v))
             return c
-        if kv_quant and c.k.dtype != jnp.int8:
-            q = lambda x: jnp.clip(jnp.round(x.astype(jnp.float32) / KV_SCALE),
-                                   -127, 127).astype(jnp.int8)
-            return c._replace(k=q(c.k), v=q(c.v))
-        if not kv_quant and c.k.dtype == jnp.int8:
-            dq = lambda x: x.astype(dtype) * KV_SCALE
-            return c._replace(k=dq(c.k), v=dq(c.v))
+        if isinstance(c, PagedKVCache):
+            if kv_quant and c.kp.dtype != jnp.int8:
+                return c._replace(kp=q(c.kp), vp=q(c.vp))
+            if not kv_quant and c.kp.dtype == jnp.int8:
+                return c._replace(kp=dq(c.kp), vp=dq(c.vp))
+            return c
         return c
 
     return tuple(one(c) for c in caches)

@@ -152,6 +152,21 @@ def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
     return step
 
 
+def make_paged_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+    """Returns step(params, tokens, start, caches, slot) -> (logits, caches).
+
+    The paged engine's admission cell: one prompt chunk written straight
+    into the batched page-pool caches at ``slot``'s block-table row. Both
+    ``start`` and ``slot`` are traced — ONE executable per (variant, chunk
+    length) serves every chunk of every slot."""
+    from repro.serve import prefill as prefill_mod
+
+    def step(params, tokens, start, caches, slot):
+        return prefill_mod.paged_prefill_chunk(params, tokens, start, caches,
+                                               slot, cfg, knobs=knobs)
+    return step
+
+
 def make_prefill_fn(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                     ep_axis: Optional[str] = None, mesh=None,
                     remat: str = "full"):

@@ -1,0 +1,114 @@
+"""Property tests for ``serve.slots.convert_caches`` (kv_quant hot-swap
+re-encoding): int8 -> fp32 -> int8 round-trips must be idempotent, and
+positions / cursors / block tables / Mamba state must be bit-identical
+across any conversion chain — for both the dense ring and paged pool cache
+layouts. Hypothesis-driven when available (tests/_hypothesis_compat.py
+self-skips in sealed images); a fixed-seed smoke always runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.attention import KVCache, PagedKVCache
+from repro.models.mamba2 import MambaCache
+from repro.serve import slots as slots_mod
+
+ARCHS = ["phi4-mini-3.8b", "zamba2-2.7b", "mamba2-780m"]
+
+
+def _random_fill(caches, seed):
+    """Fill zero-initialized caches with random payloads: K/V values, valid
+    position prefixes, nonzero cursors/block tables, random SSM state."""
+    rng = np.random.default_rng(seed)
+
+    def fill_kv(x):
+        return jnp.asarray(rng.standard_normal(x.shape), x.dtype)
+
+    out = []
+    for c in caches:
+        if isinstance(c, KVCache):
+            W = c.pos.shape[2]
+            n = int(rng.integers(0, W + 1))
+            pos = np.full(c.pos.shape, -1, np.int32)
+            pos[:, :, :n] = rng.integers(0, 64, (pos.shape[0],
+                                                 pos.shape[1], n))
+            out.append(KVCache(fill_kv(c.k), fill_kv(c.v), jnp.asarray(pos),
+                               jnp.asarray(rng.integers(0, W, c.cursor.shape),
+                                           jnp.int32)))
+        elif isinstance(c, PagedKVCache):
+            ppos = rng.integers(-1, 32, c.ppos.shape).astype(np.int32)
+            block = rng.integers(0, c.kp.shape[1],
+                                 c.block.shape).astype(np.int32)
+            out.append(PagedKVCache(fill_kv(c.kp), fill_kv(c.vp),
+                                    jnp.asarray(ppos), jnp.asarray(block)))
+        else:
+            assert isinstance(c, MambaCache), type(c)
+            out.append(MambaCache(*(fill_kv(x) for x in c)))
+    return tuple(out)
+
+
+def _leaves_equal(a, b):
+    return all(x.dtype == y.dtype and bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _check_roundtrip(arch, seed, paged, batch=2, max_len=8):
+    cfg = get_config(arch + "-smoke")
+    if paged:
+        caches = lm.init_paged_caches(cfg, batch, n_pages=8, page_size=4,
+                                      max_pages=2, dtype=jnp.float32)
+    else:
+        caches = lm.init_caches(cfg, batch, max_len, dtype=jnp.float32)
+    c0 = _random_fill(caches, seed)
+    q1 = slots_mod.convert_caches(c0, True)          # fp32 -> int8
+    dq = slots_mod.convert_caches(q1, False)         # int8 -> fp32
+    q2 = slots_mod.convert_caches(dq, True)          # fp32 -> int8 again
+
+    def kv_leaves(cs):
+        return [(c.k, c.v) if isinstance(c, KVCache) else (c.kp, c.vp)
+                for c in cs if isinstance(c, (KVCache, PagedKVCache))]
+
+    # int8 -> fp32 -> int8 is idempotent: requantizing a dequantized ring
+    # reproduces it bit-for-bit (values sit exactly on the KV_SCALE grid)
+    for (k1, v1), (k2, v2) in zip(kv_leaves(q1), kv_leaves(q2)):
+        assert k1.dtype == k2.dtype == jnp.int8
+        assert bool(jnp.all(k1 == k2)) and bool(jnp.all(v1 == v2))
+    # converting an already-matching tree is the identity
+    assert _leaves_equal(q2, slots_mod.convert_caches(q2, True))
+    assert _leaves_equal(c0, slots_mod.convert_caches(c0, False))
+
+    # positions / cursors / block tables / Mamba state ride through every
+    # conversion bit-identically
+    def carried(cs):
+        out = []
+        for c in cs:
+            if isinstance(c, KVCache):
+                out += [c.pos, c.cursor]
+            elif isinstance(c, PagedKVCache):
+                out += [c.ppos, c.block]
+            else:
+                out += list(c)
+        return out
+
+    for chain in (q1, dq, q2):
+        assert _leaves_equal(carried(c0), carried(chain))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(arch=st.sampled_from(ARCHS), seed=st.integers(0, 2**16),
+       paged=st.booleans(), batch=st.integers(1, 3))
+def test_convert_roundtrip_property(arch, seed, paged, batch):
+    _check_roundtrip(arch, seed, paged, batch=batch)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("paged", [False, True])
+def test_convert_roundtrip_smoke(arch, paged):
+    """Fixed-seed coverage for sealed images (no hypothesis)."""
+    _check_roundtrip(arch, seed=0, paged=paged)
