@@ -1,15 +1,24 @@
 """Kernel microbenchmarks: µs/call (CPU; Pallas interpret vs jnp reference)
-and max abs error vs oracle. On TPU the same harness times the native path."""
+and max abs error vs oracle. On TPU the same harness times the native path.
+
+The paged-decode section also accounts *bytes moved*: the gather path's HBM
+traffic comes from the compiled executable's ``cost_analysis`` (it scales
+with slots x max_len — the dense gather buffer), the fused kernel's from its
+per-live-page cost model — the numbers behind the explorer's paged decode
+pricing, persisted to ``BENCH_kernels.json``."""
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Rows, timed
+from benchmarks.common import RESULTS_DIR, Rows, timed
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.paged_attention import decode_hbm_bytes, paged_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -65,4 +74,101 @@ def main(rows: Rows):
              f"max_err={float(jnp.max(jnp.abs(o_chunk - o_naive))):.2e}")
     rows.add("kernel.ssd.pallas", t_k * 1e6,
              f"interpret;max_err={float(jnp.max(jnp.abs(o_k - o_naive))):.2e}")
+
+    paged_decode_rows(rows)
+    return rows
+
+
+def _paged_case(live_per_slot: int, *, B=4, G=2, R=2, hd=32, P=8, M=8,
+                n_pages=40, quantized=False, seed=0):
+    """Random paged pool with ``live_per_slot`` mapped pages per slot (the
+    last one partial); returns the fused-kernel argument tuple."""
+    rng = np.random.default_rng(seed)
+    if quantized:
+        kp = rng.integers(-127, 128, (n_pages, P, G, hd)).astype(np.int8)
+        vp = rng.integers(-127, 128, (n_pages, P, G, hd)).astype(np.int8)
+    else:
+        kp = (rng.normal(size=(n_pages, P, G, hd)) * 0.3).astype(np.float32)
+        vp = rng.normal(size=(n_pages, P, G, hd)).astype(np.float32)
+    block = np.zeros((B, M), np.int32)
+    ppos = np.full((n_pages, P), -1, np.int32)
+    pid = 1
+    for b in range(B):
+        for lp in range(live_per_slot):
+            block[b, lp] = pid
+            ppos[pid] = np.arange(lp * P, (lp + 1) * P)
+            pid += 1
+    position = np.full((B,), live_per_slot * P - P // 2 - 1, np.int32)
+    q = (rng.normal(size=(B, G, R, hd)) * 0.3).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (q, kp, vp, ppos, block, position))
+
+
+def _gather_path(q, kp, vp, ppos, block, position, *, window=0, kv_scale=0.0):
+    """The pre-kernel reference: materialize every block-table page into a
+    dense (B, M*P) buffer, then one masked softmax (models.attention's
+    ``_gather_pages`` path on raw arrays)."""
+    from repro.models.attention import PagedKVCache, _gather_pages, _sdpa
+    B, G, R, hd = q.shape
+    cache = PagedKVCache(kp, vp, ppos, block)
+    kk, vv, _, valid = _gather_pages(cache, block, position[:, None],
+                                     window=window)
+    dq = (lambda a: a.astype(q.dtype) * kv_scale) if kv_scale else \
+        (lambda a: a.astype(q.dtype))
+    o = _sdpa(q[:, None], dq(kk), dq(vv), mask=valid[:, None, None])
+    return o[:, 0]
+
+
+def _compiled_bytes(fn, *args) -> float:
+    cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):      # jax<=0.4.x drift
+        cost = cost[0] if cost else {}
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def paged_decode_rows(rows: Rows):
+    """Fused paged-decode kernel vs the gather reference: µs/call + max err
+    (fp32 / int8 KV / windowed) and the bytes-moved account showing fused
+    HBM traffic scaling with LIVE pages while the gather path stays pinned
+    at slots x max_len."""
+    out = {}
+    B, G, R, hd, P, M = 4, 2, 2, 32, 8, 8
+    variants = [
+        ("fp32", dict(), dict(quantized=False)),
+        ("int8", dict(kv_scale=0.05), dict(quantized=True)),
+        ("windowed", dict(window=16), dict(quantized=False)),
+    ]
+    for name, kw, mk in variants:
+        q, kp, vp, ppos, block, position = _paged_case(4, B=B, G=G, R=R,
+                                                       hd=hd, P=P, M=M, **mk)
+        t_ref, o_ref = timed(lambda: jax.block_until_ready(
+            _gather_path(q, kp, vp, ppos, block, position, **kw)))
+        t_k, o_k = timed(lambda: jax.block_until_ready(
+            paged_attention(q, kp, vp, ppos, block, position,
+                            interpret=True, **kw)))
+        err = float(jnp.max(jnp.abs(o_k - o_ref)))
+        rows.add(f"kernel.paged_decode.{name}.gather", t_ref * 1e6,
+                 "jnp gather reference")
+        rows.add(f"kernel.paged_decode.{name}.fused", t_k * 1e6,
+                 f"interpret;max_err={err:.2e}")
+        out[name] = {"gather_us": t_ref * 1e6, "fused_us": t_k * 1e6,
+                     "max_err": err}
+
+    # bytes moved per decode step: gather traffic is live-page-INVARIANT
+    # (the dense buffer is always B x M x P), fused traffic is live pages
+    kv_bytes = 4
+    for label, live in (("sparse", 2), ("dense", 8)):
+        q, kp, vp, ppos, block, position = _paged_case(live, B=B, G=G, R=R,
+                                                       hd=hd, P=P, M=M)
+        gather_b = _compiled_bytes(_gather_path, q, kp, vp, ppos, block,
+                                   position)
+        fused_b = decode_hbm_bytes(B * live, P, G, hd, kv_bytes=kv_bytes,
+                                   batch=B, n_heads=G * R, max_pages=M)
+        out[f"bytes_{label}"] = {
+            "live_pages": B * live,
+            "gather_bytes": gather_b,      # cost_analysis of the gather exe
+            "fused_bytes": fused_b,        # kernel cost model: O(live pages)
+        }
+        rows.add(f"kernel.paged_decode.bytes.{label}", fused_b,
+                 f"live_pages={B * live};gather_bytes={gather_b:.0f}")
+    (RESULTS_DIR / "BENCH_kernels.json").write_text(json.dumps(out, indent=1))
     return rows

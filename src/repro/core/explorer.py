@@ -117,9 +117,57 @@ def analytic_quality_loss(cfg: ModelConfig, k: ApproxKnobs) -> float:
     return q
 
 
+def decode_kv_share(cfg: ModelConfig, batch: int, max_len: int, *,
+                    dtype=None, quantized: bool = False) -> float:
+    """KV-cache share of one dense decode step's HBM bytes, derived from the
+    COMPILED decode cell's ``cost_analysis()`` (the dry-run's roofline input)
+    rather than the old hard-coded 0.5 heuristic.
+
+    The ring bytes are exact (every attention layer streams its full
+    ``(B, W, G, hd)`` K+V rings once per token); the denominator is the
+    executable's total bytes accessed. This is what makes paged decode
+    pricing honest: the fused paged kernel streams LIVE pages instead of the
+    rings, so the memory term scales by ``kv_share * occupancy`` — and
+    ``kv_share`` must come from the real executable, not a guess.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models import api
+    from repro.train import step as step_mod
+    dtype = dtype or jnp.float32
+    step = step_mod.make_serve_step(cfg, PRECISE)
+    params = api.abstract(cfg, dtype)
+    # caches at the SAME dtype as the ring-bytes numerator below — a dtype
+    # mismatch here (e.g. bf16 caches under an fp32 numerator) silently
+    # doubles the share this function exists to make honest
+    caches = api.abstract_caches(cfg, batch, max_len, quantized=quantized,
+                                 dtype=dtype)
+    toks = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    compiled = jax.jit(step).lower(params, toks, pos, caches).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax<=0.4.x drift (see dryrun)
+        cost = cost[0] if cost else {}
+    total = float(cost.get("bytes accessed", 0.0))
+    from repro.configs.base import LOCAL_ATTN, MAMBA
+    itemsize = 1 if quantized else jnp.dtype(dtype).itemsize
+    hd, G = cfg.resolved_head_dim, cfg.n_kv_heads
+    ring = 0
+    for kind in cfg.kinds():
+        if kind == MAMBA:
+            continue
+        W = min(cfg.window, max_len) if kind == LOCAL_ATTN and cfg.window \
+            else max_len
+        ring += 2 * batch * W * G * hd * itemsize      # K + V read per step
+    if total <= 0 or ring <= 0:
+        return 0.5                           # analytic fallback
+    return min(ring / total, 0.95)
+
+
 def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
                   baseline_art: Optional[dict] = None, *,
-                  page_occupancy: Optional[float] = None
+                  page_occupancy: Optional[float] = None,
+                  kv_share: Optional[float] = None
                   ) -> Tuple[float, ResourcePressure]:
     """(rel_time, pressure) from the roofline model.
 
@@ -128,9 +176,12 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
 
     ``page_occupancy`` (paged serving engines): fraction of the dense cache
     footprint that is live pages. Dense decode streams the full ``max_len``
-    rings every step; a paged pool streams only mapped pages, so the
-    KV share of the decode memory term scales by occupancy — the frontier
-    then sees paged memory savings exactly like any other memory-side knob.
+    rings every step; a paged pool (fused kernel) streams only mapped pages,
+    so the KV share of the decode memory term scales by occupancy — the
+    frontier then sees paged memory savings exactly like any other
+    memory-side knob. ``kv_share`` is that KV share of decode HBM bytes,
+    ideally from ``decode_kv_share`` (compiled-cell ``cost_analysis``);
+    None falls back to the coarse 0.5 heuristic.
     """
     from repro import roofline
     if baseline_art is not None:
@@ -172,11 +223,14 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
     if k.kv_quant:
         f_mem *= 0.7
     if page_occupancy is not None and shape.kind == "decode":
-        # decode HBM traffic priced by LIVE pages: the KV share of the
-        # memory term (the rings dominate weight streaming at long context)
-        kv_share = 0.5
+        # decode HBM traffic priced by LIVE pages (the fused paged kernel
+        # streams mapped pages, not slots x max_len rings): scale the KV
+        # share of the memory term by occupancy. kv_share comes from the
+        # compiled cell's cost_analysis (decode_kv_share) when the caller
+        # provides it; 0.5 is the coarse long-context fallback.
+        share = 0.5 if kv_share is None else min(max(kv_share, 0.0), 0.95)
         occ = min(max(page_occupancy, 0.0), 1.0)
-        f_mem *= (1 - kv_share) + kv_share * occ
+        f_mem *= (1 - share) + share * occ
     comp2, mem2, coll2 = comp * f_flops, mem * f_mem, coll * f_coll
     t_prec = max(comp, mem, coll)
     t = max(comp2, mem2, coll2)
@@ -208,12 +262,15 @@ def explore(cfg: ModelConfig, shape, *, serving: bool = False,
             max_loss: float = 0.05, baseline_art: Optional[dict] = None,
             evaluate: Optional[Callable] = None,
             max_variants: int = 8,
-            page_occupancy: Optional[float] = None) -> VariantTable:
+            page_occupancy: Optional[float] = None,
+            kv_share: Optional[float] = None) -> VariantTable:
     """Build the ordered VariantTable for one (arch, shape) colocation.
 
     ``evaluate(knobs) -> (rel_time, quality_loss, pressure)`` overrides the
     analytic backend (the measured path used by benchmarks).
-    ``page_occupancy`` prices decode HBM by live pages (paged engines).
+    ``page_occupancy`` prices decode HBM by live pages (paged engines);
+    ``kv_share`` anchors that pricing on the compiled decode cell's
+    cost_analysis bytes (``decode_kv_share``).
     """
     cands = knob_grid(cfg, serving=serving)
     evaluated = []
@@ -222,7 +279,8 @@ def explore(cfg: ModelConfig, shape, *, serving: bool = False,
             rel_t, qloss, pressure = evaluate(k)
         else:
             rel_t, pressure = analytic_cost(cfg, shape, k, baseline_art,
-                                            page_occupancy=page_occupancy)
+                                            page_occupancy=page_occupancy,
+                                            kv_share=kv_share)
             qloss = analytic_quality_loss(cfg, k)
         evaluated.append(Variant(k, rel_t, qloss, pressure))
     # threshold first (paper: discard variants with inaccuracy > 5%)

@@ -1,0 +1,186 @@
+"""Pallas TPU kernel: fused paged-attention decode (vLLM-style).
+
+One query token per batch slot attends over its block table's K/V pages
+**in place**: the grid runs (slot, kv_head, logical_page) with the page dim
+innermost (sequential), the block table and per-slot positions are scalar-
+prefetched so each page's BlockSpec index map streams the *physical* page
+HBM -> VMEM directly, and an online-softmax accumulator in VMEM scratch
+folds pages as they arrive. The dense ``(B, S_max, G, hd)`` gather buffer of
+the reference path never exists, so per-step decode HBM traffic scales with
+LIVE pages instead of slots x max_len.
+
+Dead traffic is skipped at two levels:
+
+* **index map** — unmapped block entries already point at the reserved null
+  page 0; with ``window`` > 0 the map also redirects pages wholly below the
+  local-attention band to page 0. Consecutive grid steps that map the same
+  page elide the re-fetch, so skipped pages cost (at most) one null-page DMA.
+* **``@pl.when`` body guard** — null/out-of-band/future pages skip the MXU
+  work entirely; partial pages are masked per-entry by the page's ``ppos``
+  row (position -1 = empty, plus causal/window masking), exactly mirroring
+  the reference ``models.attention._gather_pages`` validity.
+
+``kv_scale`` > 0 fuses int8 -> fp dequantization into the page load (the
+``kv_quant`` serving knob): quantized K/V pages stream as int8 and are
+scaled in VMEM, never round-tripping through an fp32 HBM buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(block_ref, pos_ref, q_ref, k_ref, v_ref, ppos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page: int, n_m: int, window: int,
+            kv_scale: float, cap: float, scale: float):
+    b = pl.program_id(0)
+    m = pl.program_id(2)          # logical page (sequential)
+
+    @pl.when(m == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pid = block_ref[b, m]
+    pos = pos_ref[b]
+    run = pid != 0                               # unmapped -> null page
+    run &= m * page <= pos                       # page starts past the query
+    if window:
+        run &= (m + 1) * page - 1 > pos - window  # wholly below the band
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (R, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # (P, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_scale:                                 # fused int8 dequant
+            k = k * kv_scale
+            v = v * kv_scale
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kv_pos = ppos_ref[...]                       # (1, P)
+        valid = (kv_pos >= 0) & (kv_pos <= pos)
+        if window:
+            valid &= kv_pos > pos - window
+        s = jnp.where(valid, s, NEG_INF)             # (R, P)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(m == n_m - 1)
+    def _finish():
+        # all-masked slots (inactive decode rows) leave l == 0: emit zeros
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "kv_scale", "cap", "interpret"))
+def paged_attention(q, kp, vp, ppos, block, position, *, window: int = 0,
+                    kv_scale: float = 0.0, cap: float = 0.0,
+                    interpret: bool = False):
+    """Fused paged decode attention.
+
+    q: (B, G, R, hd) — current token's queries, grouped by KV head;
+    kp/vp: (n_pages, P, G, hd) physical page pools (int8 when ``kv_scale``);
+    ppos: (n_pages, P) absolute positions (-1 empty); block: (B, M) int32
+    physical page ids (0 = unmapped); position: (B,) absolute query position.
+    Returns (B, G, R, hd) in q.dtype.
+    """
+    B, G, R, hd = q.shape
+    n_pages, P = ppos.shape
+    M = block.shape[1]
+    block = block.astype(jnp.int32)
+    position = position.astype(jnp.int32)
+
+    def _qo_map(b, g, m, block_ref, pos_ref):
+        return (b, g, 0, 0)
+
+    def _page_map(b, g, m, block_ref, pos_ref):
+        pid = block_ref[b, m]
+        if window:
+            # redirect wholly-out-of-band pages to the null page: the fetch
+            # aliases page 0 (elided when consecutive) instead of streaming
+            # a page the body guard would ignore anyway
+            dead = (m + 1) * P - 1 <= pos_ref[b] - window
+            pid = jnp.where(dead, 0, pid)
+        return (pid, 0, 0, 0)
+
+    def _kv_map(b, g, m, block_ref, pos_ref):
+        pid = _page_map(b, g, m, block_ref, pos_ref)[0]
+        return (pid, 0, g, 0)
+
+    def _ppos_map(b, g, m, block_ref, pos_ref):
+        pid = _page_map(b, g, m, block_ref, pos_ref)[0]
+        return (pid, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, G, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), _qo_map),
+            pl.BlockSpec((1, P, 1, hd), _kv_map),
+            pl.BlockSpec((1, P, 1, hd), _kv_map),
+            pl.BlockSpec((1, P), _ppos_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R, hd), _qo_map),
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, page=P, n_m=M, window=window, kv_scale=kv_scale, cap=cap,
+        scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block, position, q, kp, vp, ppos)
+
+
+def page_hbm_bytes(page_size: int, n_kv_heads: int, head_dim: int, *,
+                   kv_bytes: int = 4) -> int:
+    """HBM bytes one live page streams through the fused kernel: K + V
+    entries at the cache dtype width plus the int32 ``ppos`` row."""
+    return 2 * page_size * n_kv_heads * head_dim * kv_bytes + 4 * page_size
+
+
+def decode_hbm_bytes(live_pages: int, page_size: int, n_kv_heads: int,
+                     head_dim: int, *, kv_bytes: int = 4, batch: int = 1,
+                     n_heads: int = 0, q_bytes: int = 4,
+                     max_pages: int = 0) -> int:
+    """Per-step attention HBM bytes of the fused paged decode: every live
+    page streamed once (each KV head's slice exactly once), plus the query/
+    output vectors and the scalar-prefetched tables (the full (B, max_pages)
+    block table + the (B,) positions). This is the kernel's cost model —
+    O(live pages), not O(slots x max_len) — used by the explorer's decode
+    pricing and the kernel benchmark's bytes-moved accounting."""
+    nh = n_heads or n_kv_heads
+    qo = 2 * batch * nh * head_dim * q_bytes
+    tables = batch * 4 * (max_pages + 1)        # block rows + positions, int32
+    return live_pages * page_hbm_bytes(page_size, n_kv_heads, head_dim,
+                                       kv_bytes=kv_bytes) + qo + tables

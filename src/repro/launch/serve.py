@@ -33,14 +33,22 @@ from repro.serve.engine import Request, ServeEngine
 
 def serving_table(cfg: ModelConfig, *, slots: int, max_len: int,
                   max_loss: float = 0.05,
-                  page_occupancy: float = None) -> VariantTable:
+                  page_occupancy: float = None,
+                  price_from_compile: bool = False) -> VariantTable:
     """The serving VariantTable for one engine shape, from the explorer.
 
     ``page_occupancy``: expected live-page fraction of a paged engine —
-    prices decode HBM by live pages so the frontier sees paged savings."""
+    prices decode HBM by live pages so the frontier sees paged savings.
+    ``price_from_compile`` anchors that pricing on the compiled decode
+    cell's ``cost_analysis`` bytes (``explorer.decode_kv_share``) instead
+    of the coarse heuristic — one extra compile, so opt-in."""
     shape = ShapeConfig("serve", max_len, slots, "decode")
+    kv_share = None
+    if price_from_compile and page_occupancy is not None:
+        from repro.core.explorer import decode_kv_share
+        kv_share = decode_kv_share(cfg, slots, max_len)
     return explore(cfg, shape, serving=True, max_loss=max_loss,
-                   page_occupancy=page_occupancy)
+                   page_occupancy=page_occupancy, kv_share=kv_share)
 
 
 def percentiles(lat, ps=(50, 95, 99)):
@@ -87,7 +95,8 @@ def main(argv=None):
     occupancy = (min(1.0, (args.prompt_len + args.max_new) / args.max_len)
                  if args.paged else None)
     table = serving_table(cfg, slots=args.slots, max_len=args.max_len,
-                          page_occupancy=occupancy)
+                          page_occupancy=occupancy,
+                          price_from_compile=args.paged)
     names = [v.name for v in table.variants]
 
     mesh = None
@@ -132,7 +141,7 @@ def main(argv=None):
             reqs[nxt].t_arrival = t0 + arrivals[nxt]
             eng.submit(reqs[nxt])
             nxt += 1
-        if not eng.pending and all(s is None for s in eng.slots):
+        if eng.idle:                 # queue, in-flight admission, slots all empty
             if nxt < len(reqs):      # open loop: idle until the next arrival
                 time.sleep(min(arrivals[nxt] - now, 0.01))
                 continue
@@ -143,18 +152,21 @@ def main(argv=None):
 
     # per-token latency seen by each request (inter-token gap; first token's
     # gap runs from arrival, so it includes queueing + admission prefill)
-    tok_lat, ttft, queue_delay = [], [], []
+    tok_lat, ttft, queue_wait, admit_compute = [], [], [], []
     for r in reqs:
         if not r.token_times:
             continue
         ts = [r.t_arrival or r.t_admit] + r.token_times
         tok_lat.extend(b - a for a, b in zip(ts, ts[1:]))
         ttft.append(r.token_times[0] - ts[0])
-        if r.t_arrival and r.t_admit:
-            # t_admit marks admission COMPLETION, so this is true queueing +
-            # prefill delay (recording the prefill START here used to
-            # under-count it by the whole admission)
-            queue_delay.append(r.t_admit - r.t_arrival)
+        if r.t_arrival and r.t_admit_start:
+            # now that prefill interleaves with decode (paged stall-free
+            # loop), the old arrival->completion delta mixed three things;
+            # report queue WAIT (arrival -> first chunk issued) separately
+            # from admission COMPUTE (pure prefill executable time)
+            queue_wait.append(r.t_admit_start - r.t_arrival)
+        if r.t_admit:
+            admit_compute.append(r.admit_compute_s)
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     pct = percentiles(tok_lat)
@@ -164,10 +176,12 @@ def main(argv=None):
     print(f"{done}/{len(reqs)} requests, {toks} tokens in {wall:.2f}s "
           f"({toks / max(wall, 1e-9):.1f} tok/s, rate={args.rate}/s)")
     ttft95 = float(np.percentile(ttft, 95)) if ttft else float("nan")
-    q95 = float(np.percentile(queue_delay, 95)) if queue_delay else 0.0
+    q95 = float(np.percentile(queue_wait, 95)) if queue_wait else 0.0
+    a95 = float(np.percentile(admit_compute, 95)) if admit_compute else 0.0
     print(f"per-token latency ms: p50={1e3 * pct[50]:.1f} "
           f"p95={1e3 * pct[95]:.1f} p99={1e3 * pct[99]:.1f}  "
-          f"ttft p95={1e3 * ttft95:.1f}  queue p95={1e3 * q95:.1f}")
+          f"ttft p95={1e3 * ttft95:.1f}  queue-wait p95={1e3 * q95:.1f}  "
+          f"admit-compute p95={1e3 * a95:.1f}")
     if args.paged:
         s = eng.pool.stats
         looks = s["prefix_hits"] + s["prefix_misses"]

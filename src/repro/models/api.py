@@ -94,18 +94,19 @@ def make_inputs(cfg: ModelConfig, shape_or_specs, key=None):
 
 
 def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
-                    quantized: bool = False, paged=None):
+                    quantized: bool = False, paged=None,
+                    dtype=jnp.bfloat16):
     """``paged``: a ``serve.pages.PageSpec`` (or anything with page_size /
     n_pages / max_pages) selects the paged cache layout."""
     if cfg.family == "encdec":
         assert paged is None, "paged caches: decoder-only serving path"
-        fn = lambda: encdec_mod.init_caches(cfg, batch, max_len,
+        fn = lambda: encdec_mod.init_caches(cfg, batch, max_len, dtype,
                                             quantized=quantized)
     elif paged is not None:
         fn = lambda: lm_mod.init_paged_caches(
             cfg, batch, paged.n_pages, paged.page_size, paged.max_pages,
-            quantized=quantized)
+            dtype=dtype, quantized=quantized)
     else:
-        fn = lambda: lm_mod.init_caches(cfg, batch, max_len,
+        fn = lambda: lm_mod.init_caches(cfg, batch, max_len, dtype=dtype,
                                         quantized=quantized)
     return jax.eval_shape(fn)

@@ -305,14 +305,31 @@ def _gather_pages(cache: PagedKVCache, block, q_positions, *, window: int):
 
 def paged_decode_attention(params, x, position, cache: PagedKVCache,
                            cfg: ModelConfig, *, window: int = 0,
-                           kv_scale: float = 0.0):
+                           kv_scale: float = 0.0, active=None,
+                           use_kernel: Optional[bool] = None,
+                           interpret: bool = False):
     """One-token decode against the paged pool. x: (B,1,D); position: (B,).
 
     The new K/V entry scatters into the slot's private tail page (host-side
     allocation guarantees it is mapped and unshared before the step runs);
-    attention gathers every mapped page through the block table and masks by
+    attention reads every mapped page through the block table masked by
     position/window — the paged sibling of ``decode_attention``.
+
+    ``active`` (B,) bool masks the cache WRITE per slot: rows of a decode
+    batch whose slot has no live request (e.g. an admission prefilling in
+    the background between decode steps) must not scatter garbage into
+    their mapped pages or ppos rows. Inactive rows' outputs are garbage the
+    engine never reads.
+
+    ``use_kernel`` selects the fused Pallas kernel
+    (``kernels.paged_attention``): pages stream HBM->VMEM in place via the
+    block table with online-softmax accumulation — O(live pages) traffic.
+    Defaults to the kernel on TPU; the ``_gather_pages`` + ``_sdpa`` path
+    below is the interpret/reference fallback (and the GSPMD path for
+    sharded pools).
     """
+    from repro.kernels import ops as kops
+    from repro.kernels.paged_attention import paged_attention
     B, one, D = x.shape
     hd = cfg.resolved_head_dim
     G, R = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
@@ -332,11 +349,22 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
                                axis=1)[:, 0]              # (B,)
     sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
            & (jnp.arange(P)[None, None, :] == (position % P)[:, None, None]))
+    if active is not None:
+        sel &= active[:, None, None]
     write = sel.any(axis=0)
     nkp = _page_scatter(sel, write, cache.kp, k_store[:, 0])
     nvp = _page_scatter(sel, write, cache.vp, v_store[:, 0])
     nppos = _page_scatter(sel, write, cache.ppos, position)
     new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
+
+    if use_kernel is None:
+        use_kernel = kops._on_tpu()
+    if use_kernel:
+        qk = q[:, 0].reshape(B, G, R, hd)
+        o = paged_attention(qk, nkp, nvp, nppos, cache.block, position,
+                            window=window, kv_scale=kv_scale,
+                            cap=cfg.attn_softcap, interpret=interpret)
+        return o.reshape(B, 1, cfg.q_dim) @ params["wo"], new_cache
 
     kk, vv, _, valid = _gather_pages(new_cache, cache.block, position[:, None],
                                      window=window)

@@ -140,14 +140,20 @@ def block_prefill_paged(kind: str, params, h, positions, cache,
 def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
                  knobs: ApproxKnobs = PRECISE, *,
                  ep_axis: Optional[str] = None, mesh=None,
-                 enc_out: Optional[jax.Array] = None):
-    """Single-token decode. Returns (h, new_cache, aux)."""
+                 enc_out: Optional[jax.Array] = None, active=None,
+                 use_kernel: Optional[bool] = None):
+    """Single-token decode. Returns (h, new_cache, aux).
+
+    ``active`` (B,) bool masks per-slot cache writes (paged engines whose
+    decode interleaves with background admission); None = all rows live.
+    ``use_kernel`` forwards the paged-attention dispatch override (sharded
+    engines force the GSPMD-safe gather path)."""
     aux = jnp.zeros((), jnp.float32)
     prec = knobs.matmul_precision
     if kind == MAMBA:
         y, new_cache = mamba_mod.mamba_decode(
             params["mixer"], rms_norm(h, params["norm"], cfg.norm_eps),
-            cache, cfg, precision=prec)
+            cache, cfg, precision=prec, active=active)
         return h + y, new_cache, aux
     window = cfg.window if kind == LOCAL_ATTN else 0
     kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
@@ -155,7 +161,7 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
     if isinstance(cache, attn_mod.PagedKVCache):
         y, new_cache = attn_mod.paged_decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,
-            kv_scale=kv_scale)
+            kv_scale=kv_scale, active=active, use_kernel=use_kernel)
     else:
         y, new_cache = attn_mod.decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,

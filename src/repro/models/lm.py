@@ -260,10 +260,13 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
 def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                 knobs: ApproxKnobs = PRECISE, *,
                 ep_axis: Optional[str] = None, mesh=None,
-                enc_out: Optional[jax.Array] = None):
+                enc_out: Optional[jax.Array] = None, active=None,
+                use_kernel: Optional[bool] = None):
     """tokens: (B,1) int32; position: (B,) absolute positions.
 
-    Returns (logits (B,V) fp32, new_caches).
+    Returns (logits (B,V) fp32, new_caches). ``active`` (B,) bool masks
+    per-slot cache writes and ``use_kernel`` overrides the paged-attention
+    kernel dispatch (see ``blocks.block_decode``).
     """
     h = params["embed"][tokens[:, 0]][:, None, :]
     shared = params.get("shared")
@@ -275,7 +278,8 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
             p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
             h, nc, _ = block_decode(kind, p, h, position, group_caches[j],
                                     cfg, knobs, ep_axis=ep_axis, mesh=mesh,
-                                    enc_out=enc_out)
+                                    enc_out=enc_out, active=active,
+                                    use_kernel=use_kernel)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

@@ -133,8 +133,14 @@ def mamba_prefill(params, x, cache: MambaCache, cfg: ModelConfig, *,
 
 
 def mamba_decode(params, x, cache: MambaCache, cfg: ModelConfig, *,
-                 precision: str = "bf16"):
-    """Single-token decode. x: (B,1,D) -> ((B,1,D), new_cache)."""
+                 precision: str = "bf16", active=None):
+    """Single-token decode. x: (B,1,D) -> ((B,1,D), new_cache).
+
+    ``active`` (B,) bool masks the state update per row: slots without a
+    live request (e.g. while an admission prefills in the background) keep
+    their conv history and SSD state bit-for-bit — a garbage decode token
+    must never advance a row another path is building.
+    """
     B, _, D = x.shape
     di, nh, n = _dims(cfg)
     mm = kops.matmul(precision)
@@ -157,4 +163,10 @@ def mamba_decode(params, x, cache: MambaCache, cfg: ModelConfig, *,
     y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs3
     y = y.reshape(B, 1, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
-    return mm(y, params["out_proj"]), MambaCache(hist_x, hist_bc, state)
+    new_cache = MambaCache(hist_x, hist_bc, state)
+    if active is not None:
+        keep = lambda new, old: jnp.where(
+            active.reshape((B,) + (1,) * (old.ndim - 1)), new, old)
+        new_cache = MambaCache(*(keep(n, o)
+                                 for n, o in zip(new_cache, cache)))
+    return mm(y, params["out_proj"]), new_cache

@@ -21,6 +21,23 @@ Two cache data models, selected by ``paged``:
   actions shrink/regrow ``pool_pages`` (``attach_reclaimer``), evicting
   prefix-cache pages first and never touching live requests.
 
+The paged loop is **stall-free**: admission prefill no longer runs to
+completion inside ``step()``. Each step advances AT MOST ONE bounded chunk
+of the head-of-queue admission, then decodes every active slot — a long
+prompt adds at most one chunk of work between any two decode steps, so
+concurrent decoders' inter-token gap is bounded by the chunk budget instead
+of the whole prompt. The decode executable takes a per-slot ``active`` mask
+so the admitting slot's dead batch row cannot scatter garbage into its
+(already mapped) pages or SSM rows. Admission is also **page-aware packed**:
+when the head of the queue does not fit the pool budget, the first of the
+leading ``pack_window`` pending requests that does fit is admitted instead
+— and after ``max_head_skips`` consecutive head skips admission reverts to
+strict FIFO, so head-of-line blocking AND starvation are both bounded.
+Banded-attention archs (every attention layer LOCAL) additionally free
+pages that fall out of the window as decode advances, keeping pool
+occupancy flat for long generations. The dense path keeps the legacy
+synchronous admission (its slot-insert is exact-output-critical).
+
 Serving variants come from a ``VariantTable`` (the explorer's serving grid):
 every variant's decode executable is registered up front and the active one
 is swapped at a step boundary — an O(µs) dictionary lookup, the DynamoRIO
@@ -34,6 +51,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
@@ -43,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.approx.knobs import ApproxKnobs, PRECISE
-from repro.configs.base import MAMBA, ModelConfig, ShapeConfig
+from repro.configs.base import LOCAL_ATTN, MAMBA, ModelConfig, ShapeConfig
 from repro.core.runtime import PliantRuntime
 from repro.core.variants import VariantTable
 from repro.models import lm
@@ -62,8 +80,25 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     t_arrival: float = 0.0    # driver-set (open-loop client)
+    t_admit_start: float = 0.0  # first prefill chunk issued (queue-wait ends)
     t_admit: float = 0.0      # admission COMPLETION (prefill done, slot live)
+    admit_compute_s: float = 0.0  # pure prefill executable time (no queueing,
+                                  # no interleaved decode steps)
     token_times: List[float] = field(default_factory=list)
+
+
+@dataclass
+class _Admission:
+    """One in-flight background admission (paged stall-free loop): the
+    prompt's prefill progress, advanced one bounded chunk per engine step."""
+    req: Request
+    slot: int
+    next: int                    # next prompt index to prefill
+    stops: List[int]             # ascending pause points; last == len(prompt)
+    mamba_register: List[int]    # boundaries registered WITH an SSM snapshot
+    tail_register: List[int]     # boundaries registered after completion
+    logits: object = None
+    compute_s: float = 0.0
 
 
 @dataclass
@@ -85,6 +120,13 @@ class ServeEngine:
     page_size: int = 8
     n_pages: int = 0                   # 0 = auto (serve.pages.spec_for)
     max_prefill_exes: int = 16         # LRU bound on admission executables
+    pack_window: int = 4               # pending requests scanned per step for
+                                       # page-aware packing (bounds host work
+                                       # while the pool is blocked)
+    max_head_skips: int = 64           # packing fairness: after this many
+                                       # head-of-queue skips, admit strict
+                                       # FIFO so a large request cannot be
+                                       # starved by a stream of small ones
 
     def __post_init__(self):
         if self.runtime is not None:
@@ -120,9 +162,19 @@ class ServeEngine:
         # the variant table of decode executables: registered once up front,
         # hot-swapped between steps (no recompilation on the critical path).
         # Engine-owned, never written into the (possibly shared) table —
-        # executables are lowered against THIS engine's mesh/shardings
+        # executables are lowered against THIS engine's mesh/shardings.
+        # Paged engines take the per-slot ``active`` write mask so decode
+        # can interleave with background admission (stall-free loop); under
+        # a mesh they force the gather path — the scalar-prefetch Pallas
+        # kernel does not partition under GSPMD
+        if self.paged:
+            mk = functools.partial(
+                step_mod.make_paged_serve_step,
+                use_kernel=False if self.mesh is not None else None)
+        else:
+            mk = step_mod.make_serve_step
         self._decodes = {
-            i: self._lower_decode(step_mod.make_serve_step(self.cfg, k))
+            i: self._lower_decode(mk(self.cfg, k))
             for i, k in enumerate(self._variant_knobs)}
         # admission executables, keyed by (knobs, chunk len, paged) — NOT by
         # variant index, so table entries with identical admission knobs
@@ -135,6 +187,13 @@ class ServeEngine:
         self.positions = np.zeros(self.batch_slots, np.int32)
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self.pending: Deque[Request] = collections.deque()
+        self._admission: Optional[_Admission] = None
+        self._head_skips = 0           # consecutive pool-blocked head-of-queue
+        # window-exit page freeing is sound only when EVERY attention layer
+        # is banded (a single global/shared layer still reaches every page)
+        self._window_free = (self.cfg.window if self.paged and self.cfg.window
+                             and set(self.cfg.pattern) <= {LOCAL_ATTN, MAMBA}
+                             else 0)
         self.cur_tokens = np.zeros(self.batch_slots, np.int32)
         self.step_latencies: List[float] = []
         self.admit_latencies: List[float] = []
@@ -194,6 +253,11 @@ class ServeEngine:
     def _lower_decode(self, step):
         if self.mesh is None:
             return jax.jit(step)
+        if self.paged:      # (params, tokens, position, active, caches)
+            return jax.jit(step,
+                           in_shardings=(self._param_sh, None, None, None,
+                                         self._cache_sh),
+                           out_shardings=(None, self._cache_sh))
         return jax.jit(step,
                        in_shardings=(self._param_sh, None, None,
                                      self._cache_sh),
@@ -344,90 +408,147 @@ class ServeEngine:
                 start += C
         return logits, caches
 
-    def _paged_prefill(self, slot: int, req: Request):
-        """Paged path: map pages (sharing registered prompt prefixes — a hit
-        skips those chunks entirely), prefill the remainder straight into
-        the pool, and register the longest full-page prefix with its SSM
-        boundary snapshot. Returns last-token logits, or None when the pool
-        is over budget (request stays pending)."""
-        prompt = req.prompt
-        plan = self.pool.admit(slot, prompt, self.active_knobs)
-        if plan is None:
-            return None
-        self._push_blocks()
-        snap = plan.entry.mamba if (plan.shared_tokens and plan.entry) \
-            else None
-        self._set_mamba_rows(slot, snap)
-        toks = np.asarray(prompt, np.int32)
-        S = len(prompt)
-        state = {"start": plan.shared_tokens, "logits": None}
-        sl = jnp.asarray(slot, jnp.int32)
+    def _start_admission(self) -> None:
+        """Open the next background admission (paged): pick a free slot and
+        the first of the leading ``pack_window`` pending requests whose
+        pages fit the pool budget (page-aware packing — a pool-blocked head
+        of queue must not stall admissions that fit). The window bounds the
+        per-step host work while the pool is blocked, and after
+        ``max_head_skips`` consecutive head skips admission falls back to
+        strict FIFO so a large request cannot be starved by a stream of
+        small ones. Maps the block table (prefix hits bump refcounts and
+        skip those chunks) and seeds the slot's SSM rows; prefill itself is
+        advanced chunk-by-chunk by ``_advance_admission``."""
+        if self._admission is not None or not self.pending:
+            return
+        slot = next((i for i in range(self.batch_slots)
+                     if self.slots[i] is None), None)
+        if slot is None:
+            return
+        strict = self._head_skips >= self.max_head_skips
+        window = 1 if strict else min(len(self.pending), self.pack_window)
+        for qi in range(window):
+            req = self.pending[qi]
+            assert len(req.prompt) <= self.max_len, \
+                (len(req.prompt), self.max_len)
+            assert len(req.prompt) + req.max_new <= \
+                self._page_spec.max_pages * self.page_size, \
+                "paged serving does not ring-wrap: need " \
+                "max_len >= prompt + max_new"
+            plan = self.pool.admit(slot, req.prompt, self.active_knobs)
+            if plan is None:
+                if qi == 0:
+                    self._head_skips += 1
+                continue                     # over budget: try the next one
+            if qi == 0:
+                self._head_skips = 0
+            del self.pending[qi]
+            self._push_blocks()
+            snap = plan.entry.mamba if (plan.shared_tokens and plan.entry) \
+                else None
+            self._set_mamba_rows(slot, snap)
+            has_mamba = any(isinstance(c, MambaCache) for c in self.caches)
+            S = len(req.prompt)
+            if has_mamba:
+                # prefill pauses at each boundary so its SSM snapshot matches
+                stops = sorted(set(plan.register) | {S})
+                mamba_reg, tail_reg = list(plan.register), []
+            else:
+                # attention-only: pages are position-addressed, registration
+                # is pure bookkeeping — no need to fragment the chunk stream
+                stops = [S]
+                mamba_reg, tail_reg = [], list(plan.register)
+            req.t_admit_start = time.perf_counter()
+            self._admission = _Admission(req, slot, plan.shared_tokens,
+                                         stops, mamba_reg, tail_reg)
+            return
 
-        def run_to(end: int) -> None:
-            with self._ctx():
-                while state["start"] < end:
-                    start = state["start"]
-                    C = min(self.prefill_chunk, end - start)
-                    state["logits"], self.caches = self._prefill_exe(C)(
-                        self.params,
-                        jnp.asarray(toks[None, start:start + C]),
-                        jnp.asarray(start, jnp.int32), self.caches, sl)
-                    state["start"] += C
-
-        has_mamba = any(isinstance(c, MambaCache) for c in self.caches)
-        if has_mamba:
-            # pause prefill at each boundary so its SSM snapshot matches
-            for b in plan.register:
-                run_to(b)
-                self.pool.register_prefix(slot, prompt, self.active_knobs, b,
-                                          mamba=self._mamba_snapshot(slot))
-            run_to(S)
-        else:
-            # attention-only: pages are position-addressed, registration is
-            # pure bookkeeping — no need to fragment the chunk stream
-            run_to(S)
-            for b in plan.register:
-                self.pool.register_prefix(slot, prompt, self.active_knobs, b)
+    def _advance_admission(self) -> None:
+        """Run AT MOST ONE bounded prefill chunk of the in-flight admission
+        (the stall-free loop's per-step admission budget); on the final
+        chunk, sample the first token and activate the slot."""
+        if self._admission is None:
+            self._start_admission()
+            if self._admission is None:
+                return
+        adm, req = self._admission, self._admission.req
+        S = len(req.prompt)
+        end = next(b for b in adm.stops if b > adm.next)
+        C = min(self.prefill_chunk, end - adm.next)
+        toks = np.asarray(req.prompt[adm.next:adm.next + C], np.int32)
+        t0 = time.perf_counter()
+        with self._ctx():
+            adm.logits, self.caches = self._prefill_exe(C)(
+                self.params, jnp.asarray(toks[None]),
+                jnp.asarray(adm.next, jnp.int32), self.caches,
+                jnp.asarray(adm.slot, jnp.int32))
+        adm.next += C
+        if adm.next >= S:
+            # sync only on the FINAL chunk (its logits are consumed below
+            # anyway): a per-chunk block would serialize the async dispatch
+            # pipeline the stall-free loop exists to keep full. compute_s
+            # absorbs earlier chunks' device time here — the total is right
+            jax.block_until_ready(adm.logits)
+        adm.compute_s += time.perf_counter() - t0
+        if adm.next in adm.mamba_register:
+            self.pool.register_prefix(adm.slot, req.prompt,
+                                      self.active_knobs, adm.next,
+                                      mamba=self._mamba_snapshot(adm.slot))
+        if adm.next < S:
+            return
+        # admission complete: register remaining boundaries, emit the first
+        # token, and hand the slot to the decode batch
+        for b in adm.tail_register:
+            self.pool.register_prefix(adm.slot, req.prompt,
+                                      self.active_knobs, b)
         # lookup caps sharing at len(prompt)-1 tokens, so at least one chunk
         # always ran and produced the sampling logits
-        assert state["logits"] is not None
-        return state["logits"]
+        assert adm.logits is not None
+        tok = self._sample(np.asarray(adm.logits)[0])
+        now = time.perf_counter()
+        self._admission = None
+        self.admit_latencies.append(adm.compute_s)
+        self._token_lat.append(now - req.t_admit_start)  # TTFT sample (wall)
+        req.t_admit = now                  # admission COMPLETION
+        req.admit_compute_s = adm.compute_s
+        req.out.append(tok)
+        req.token_times.append(now)
+        if len(req.out) >= req.max_new:
+            req.done = True                # 1-token request: no slot
+            if self._free_slot(adm.slot):
+                self._push_blocks()
+            return
+        self.positions[adm.slot] = S
+        self.cur_tokens[adm.slot] = tok
+        self.slots[adm.slot] = req
 
     def _admit(self) -> None:
+        """Dense path: legacy synchronous admission (full chunked prefill
+        into a fresh cache + slot insert inside one step)."""
         for i in range(self.batch_slots):
             while self.slots[i] is None and self.pending:
                 req = self.pending[0]
                 assert len(req.prompt) <= self.max_len, \
                     (len(req.prompt), self.max_len)
-                if self.paged:
-                    assert len(req.prompt) + req.max_new <= \
-                        self._page_spec.max_pages * self.page_size, \
-                        "paged serving does not ring-wrap: need " \
-                        "max_len >= prompt + max_new"
                 t0 = time.perf_counter()
-                if self.paged:
-                    logits = self._paged_prefill(i, req)
-                    if logits is None:       # pool over budget: stop admitting
-                        return
-                else:
-                    logits, rcaches = self._chunked_prefill(req.prompt)
-                    with self._ctx():
-                        self.caches = self._insert(self.caches, rcaches, i)
-                        if self._cache_sh is not None:
-                            self.caches = jax.device_put(self.caches,
-                                                         self._cache_sh)
+                req.t_admit_start = t0
+                logits, rcaches = self._chunked_prefill(req.prompt)
+                with self._ctx():
+                    self.caches = self._insert(self.caches, rcaches, i)
+                    if self._cache_sh is not None:
+                        self.caches = jax.device_put(self.caches,
+                                                     self._cache_sh)
                 self.pending.popleft()
                 tok = self._sample(np.asarray(logits)[0])
                 now = time.perf_counter()
                 self.admit_latencies.append(now - t0)
                 self._token_lat.append(now - t0)   # TTFT sample
                 req.t_admit = now                  # admission COMPLETION
+                req.admit_compute_s = now - t0     # sync: compute == wall
                 req.out.append(tok)
                 req.token_times.append(now)
                 if len(req.out) >= req.max_new:
                     req.done = True                # 1-token request: no slot
-                    if self.paged and self._free_slot(i):
-                        self._push_blocks()
                     continue
                 self.positions[i] = len(req.prompt)
                 self.cur_tokens[i] = tok
@@ -436,9 +557,16 @@ class ServeEngine:
     # --------------------------------------------------------------- steps --
 
     def step(self) -> None:
-        """One engine step: admit pending requests (chunked prefill), decode
-        one token for every active slot, then tick the Pliant control loop."""
-        self._admit()
+        """One engine step. Paged: advance the background admission by AT
+        MOST one bounded prefill chunk, then decode one token for every
+        active slot (the admitting slot rides along inactive, its writes
+        masked) — a long prompt never stalls the decoders for more than one
+        chunk. Dense: legacy synchronous admission, then decode. Both tick
+        the Pliant control loop at the step boundary."""
+        if self.paged:
+            self._advance_admission()
+        else:
+            self._admit()
         if all(s is None for s in self.slots):
             self._control_tick()       # flush TTFT samples of 1-token admits
             return
@@ -456,8 +584,14 @@ class ServeEngine:
         with self._ctx():
             toks = jnp.asarray(self.cur_tokens)[:, None]
             pos = jnp.asarray(self.positions)
-            logits, self.caches = self._decodes[self._active](
-                self.params, toks, pos, self.caches)
+            if self.paged:
+                act = jnp.asarray(
+                    np.array([s is not None for s in self.slots]))
+                logits, self.caches = self._decodes[self._active](
+                    self.params, toks, pos, act, self.caches)
+            else:
+                logits, self.caches = self._decodes[self._active](
+                    self.params, toks, pos, self.caches)
             logits = np.asarray(logits)
         dt = time.perf_counter() - t0
         self.step_latencies.append(dt)
@@ -478,13 +612,21 @@ class ServeEngine:
                 self.slots[i] = None            # slot freed: continuous batch
                 if self.paged:
                     freed |= self._free_slot(i)
+            elif self._window_free:
+                # banded arch: pages that fell out of every layer's window
+                # are dead — return them so long decodes hold occupancy flat
+                freed |= self.pool.release_window_pages(
+                    i, int(self.positions[i]) - self._window_free)
         if freed:
             self._push_blocks()
         self._token_lat.extend([dt] * n_emitted)
         self._control_tick()
 
     def _control_tick(self) -> None:
-        """Monitor -> controller -> actuator at the step boundary."""
+        """Monitor -> controller -> actuator at the step boundary. Variant
+        swaps are deferred while an admission is in flight: a mid-prompt
+        knob change would mix admission executables (and prefix tags)
+        within one request."""
         if self.runtime is None:
             self._token_lat.clear()
             return
@@ -492,12 +634,36 @@ class ServeEngine:
             self.runtime.monitor.record_many(self._token_lat)
             self._token_lat.clear()
         self.runtime.maybe_decide()
-        if self.runtime.active_variant != self._active:
+        if (self.runtime.active_variant != self._active
+                and self._admission is None):
             self.set_variant(self.runtime.active_variant)
 
-    def run(self, max_steps: int = 10_000) -> None:
+    @property
+    def idle(self) -> bool:
+        """Nothing to do: empty queue, no in-flight background admission,
+        no active slots. Drivers must check this (not just pending/slots)
+        before parking — a paged admission spans multiple steps."""
+        return (not self.pending and self._admission is None
+                and all(s is None for s in self.slots))
+
+    def run(self, max_steps: int = 0) -> None:
+        """Step until idle. ``max_steps`` (0 = auto) is a runaway backstop,
+        sized to the queued work: stall-free admission spends one step per
+        prefill CHUNK, so the old flat cap silently truncated long-prompt
+        workloads mid-flight. Hitting the cap non-idle raises — callers'
+        stats must never summarize a silently truncated run."""
+        if not max_steps:
+            chunks = sum(-(-len(r.prompt) // max(self.prefill_chunk, 1)) + 2
+                         for r in self.pending)
+            decodes = sum(r.max_new for r in self.pending)
+            max_steps = 10_000 + 2 * (chunks + decodes)
         steps = 0
-        while (self.pending or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
+        while not self.idle and steps < max_steps:
             self.step()
             steps += 1
+        if not self.idle:
+            raise RuntimeError(
+                f"engine not idle after {steps} steps: "
+                f"{len(self.pending)} pending, "
+                f"admission={'in-flight' if self._admission else 'none'}, "
+                f"{sum(s is not None for s in self.slots)} active slots")

@@ -135,7 +135,7 @@ class PagePool(CacheStore):
             allocs=0, frees=0, prefix_hits=0, prefix_misses=0,
             prefix_registered=0, prefix_evicted=0, tokens_skipped=0,
             blocked_admissions=0, reclaim_events=0, over_limit_allocs=0,
-            register_capped=0, peak_used=0)
+            register_capped=0, peak_used=0, window_freed=0)
 
     # --------------------------------------------------------- accounting --
 
@@ -289,6 +289,22 @@ class PagePool(CacheStore):
                 f"prompt needs {-(-len(prompt) // P)} pages but the pool has "
                 f"{self.spec.usable} usable; size n_pages up")
         shared, entry = self.lookup_prefix(prompt, tag)
+        n_need = -(-len(prompt) // P) - shared // P
+        # feasibility gate BEFORE touching allocator state: a doomed attempt
+        # must not evict prefix entries it cannot use. The engine's
+        # page-aware packing retries several candidates per step while the
+        # pool is blocked — without this gate every failed retry would run
+        # _alloc's pressure loop and progressively drain the prefix cache.
+        # ``evictable`` counts index pages only the index pins (ref 1):
+        # evicting those both lowers ``used`` and refills the free list, so
+        # the gate passing guarantees the allocation below succeeds.
+        hit_pages = set(entry.pages) if entry is not None else set()
+        evictable = sum(1 for e in self.index.values() for p in e.pages
+                        if self.ref[p] == 1 and p not in hit_pages)
+        if n_need > min(max(self.limit - self.used, 0) + evictable,
+                        len(self.free) + evictable):
+            self.stats["blocked_admissions"] += 1
+            return None
         if shared:
             # pin the hit pages BEFORE allocating fresh ones: under pressure
             # _alloc's LRU eviction may drop the hit entry itself, and
@@ -296,7 +312,7 @@ class PagePool(CacheStore):
             # while this admission is about to map them
             for p in entry.pages:
                 self.ref[p] += 1
-        n_new = -(-len(prompt) // P) - shared // P
+        n_new = n_need
         fresh = []
         for _ in range(n_new):
             pid = self._alloc()
@@ -354,6 +370,28 @@ class PagePool(CacheStore):
         self.blocks[slot, lp] = pid
         self.slot_pages[slot].append(pid)
         return True
+
+    def release_window_pages(self, slot: int, min_pos: int) -> bool:
+        """Free the slot's leading pages that fell out of the attention
+        window: every entry at position <= ``min_pos`` is masked by EVERY
+        layer (the caller guarantees the arch is banded-only), so pages
+        wholly at-or-below that boundary are dead weight. Deref + unmap
+        them; prefix-index pins keep shared pages alive for future hits.
+        Returns True when the block table changed (engine re-pushes)."""
+        P = self.spec.page_size
+        changed = False
+        for lp in range(self.spec.max_pages):
+            if (lp + 1) * P - 1 > min_pos:
+                break                        # first page still in the band
+            pid = int(self.blocks[slot, lp])
+            if pid == 0:
+                continue                     # already freed earlier
+            self.blocks[slot, lp] = 0
+            self.slot_pages[slot].remove(pid)
+            self._deref(pid)
+            self.stats["window_freed"] += 1
+            changed = True
+        return changed
 
     def free_slot(self, slot: int) -> bool:
         if not self.slot_pages[slot]:

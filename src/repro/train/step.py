@@ -138,6 +138,28 @@ def make_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
     return step
 
 
+def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                          ep_axis: Optional[str] = None, mesh=None,
+                          use_kernel: Optional[bool] = None):
+    """Returns step(params, tokens, position, active, caches)
+    -> (logits, new_caches) — the paged engine's decode cell.
+
+    ``active`` (B,) bool masks per-slot cache writes so decode steps can
+    interleave with a background admission: the admitting slot's mapped
+    pages / SSM rows must not receive garbage from its dead batch row.
+    ``use_kernel`` overrides the fused-kernel dispatch: sharded engines
+    pass False — the scalar-prefetch Pallas kernel does not partition
+    under GSPMD, the gather path is the multi-device story."""
+    decode = api.decode_fn(cfg)
+    assert cfg.family != "encdec", "paged serving: decoder-only path"
+
+    def step(params, tokens, position, active, caches):
+        return decode(params, tokens, position, caches, knobs=knobs,
+                      ep_axis=ep_axis, mesh=mesh, active=active,
+                      use_kernel=use_kernel)
+    return step
+
+
 def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
     """Returns step(params, tokens, start, caches) -> (logits, caches).
 

@@ -263,6 +263,101 @@ def test_controller_driven_pool_reclaim():
     assert late.out == ref[0]
 
 
+def test_stall_free_admission_bounds_decoder_gaps():
+    """A 32-chunk prompt admitted mid-run must not stall concurrent
+    decoders: the engine runs AT MOST ONE admission chunk between decode
+    executions (the stall-free budget), and every request's outputs still
+    match the dense ring engine token-by-token."""
+    cfg, params = setup("phi4-mini-3.8b")
+    rng = np.random.default_rng(13)
+    chunk = 2
+    long_prompt = list(rng.integers(1, cfg.vocab_size, 32 * chunk))
+    shorts = [list(rng.integers(1, cfg.vocab_size, 5)) for _ in range(2)]
+
+    def run(paged):
+        eng = ServeEngine(cfg, batch_slots=3, max_len=96, params=params,
+                          prefill_chunk=chunk, paged=paged, page_size=4)
+        events = []
+        if paged:
+            orig = eng._prefill_exe
+
+            def counting(C):
+                fn = orig(C)
+                return lambda *a, **k: (events.append("chunk"), fn(*a, **k))[1]
+
+            eng._prefill_exe = counting
+            for vi, fn in list(eng._decodes.items()):
+                eng._decodes[vi] = (
+                    lambda f: lambda *a, **k:
+                        (events.append("decode"), f(*a, **k))[1])(fn)
+        reqs = [Request(i, prompt=list(p), max_new=50)
+                for i, p in enumerate(shorts)]
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(6):
+            eng.step()                  # shorts admitted and mid-decode
+        big = Request(9, prompt=list(long_prompt), max_new=4)
+        eng.submit(big)
+        eng.run()
+        assert all(r.done for r in reqs + [big])
+        return [r.out for r in reqs + [big]], events
+
+    dense, _ = run(paged=False)
+    paged, events = run(paged=True)
+    assert paged == dense, (paged, dense)
+    # after the first decode, no two admission chunks back-to-back: a long
+    # prompt costs active decoders at most one chunk per token
+    tail = events[events.index("decode"):]
+    assert "decode" in tail and "chunk" in tail
+    for a, b in zip(tail, tail[1:]):
+        assert not (a == "chunk" and b == "chunk"), tail
+
+
+def test_window_pages_freed_keeps_occupancy_flat():
+    """Banded-only arch on a long decode: pages that fall out of the
+    attention window are freed at window-exit boundaries, so pool occupancy
+    stays FLAT instead of growing with generation length — and freeing dead
+    pages never changes outputs."""
+    import dataclasses
+    from repro.configs.base import LOCAL_ATTN
+    base = get_config("gemma2-27b-smoke")
+    cfg = dataclasses.replace(base, name="banded-smoke",
+                              pattern=(LOCAL_ATTN,), n_layers=2, window=8)
+    params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(17)
+    prompt = list(rng.integers(1, cfg.vocab_size, 10))
+
+    def run(window_free):
+        eng = ServeEngine(cfg, batch_slots=1, max_len=128, params=params,
+                          prefill_chunk=5, paged=True, page_size=4)
+        assert eng._window_free == (cfg.window if window_free else 0) or \
+            not window_free
+        if not window_free:
+            eng._window_free = 0
+        req = Request(0, prompt=list(prompt), max_new=80)
+        eng.submit(req)
+        live = []
+        while not req.done:
+            eng.step()
+            if eng.slots[0] is not None:
+                live.append(eng.pool.live_slot_pages())
+        return req.out, live, eng
+
+    out_free, live, eng = run(window_free=True)
+    out_keep, live_keep, _ = run(window_free=False)
+    assert out_free == out_keep                   # freed pages were dead
+    assert eng.pool.stats["window_freed"] > 0
+    # steady state: window pages + the write page, NOT position/page_size
+    steady = live[len(live) // 2:]
+    bound = cfg.window // eng.page_size + 2
+    assert max(steady) <= bound, (max(steady), bound)
+    assert max(steady) - min(steady) <= 1         # flat
+    assert max(live_keep) > bound                 # without freeing it grows
+    # total pool usage = live pages + index-pinned prefix pages, also flat
+    pinned = sum(len(e.pages) for e in eng.pool.index.values())
+    assert eng.pool.used <= bound + pinned
+
+
 def test_prefill_exe_cache_knob_keyed_and_bounded():
     """Admission executables are keyed by knobs (table entries with equal
     admission knobs share one compiled chunk cell), LRU-bounded, and evicted

@@ -1,0 +1,134 @@
+"""Fused paged-attention decode kernel: interpret-mode parity against the
+``_gather_pages`` reference path across arch families (full attention, GQA +
+softcap + sliding window, hybrid shared-attention dims), ragged per-slot page
+counts, partial last pages, and int8 KV — plus the ``active`` write-mask
+contract the stall-free serving loop depends on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn_mod
+from repro.models.attention import KV_SCALE, PagedKVCache, quantize_kv
+from repro.models.common import init_params
+
+P = 4          # page size
+M = 6          # block-table width (max logical pages)
+
+
+def _setup(name, lengths, *, quantized=False, seed=0):
+    """Random paged decode state: per-slot prompts of ``lengths`` tokens
+    already resident (ragged page counts, partial last pages), the decode
+    token landing at position ``lengths[b]``. Returns (cfg, params, x,
+    position, cache)."""
+    cfg = get_config(name + "-smoke")
+    B = len(lengths)
+    n_pages = 1 + B * M
+    rng = np.random.default_rng(seed)
+    hd, G = cfg.resolved_head_dim, cfg.n_kv_heads
+    if quantized:
+        kp = quantize_kv(jnp.asarray(
+            rng.normal(size=(n_pages, P, G, hd)) * 0.3, jnp.float32))
+        vp = quantize_kv(jnp.asarray(
+            rng.normal(size=(n_pages, P, G, hd)), jnp.float32))
+    else:
+        kp = jnp.asarray(rng.normal(size=(n_pages, P, G, hd)) * 0.3,
+                         jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(n_pages, P, G, hd)), jnp.float32)
+    block = np.zeros((B, M), np.int32)
+    ppos = np.full((n_pages, P), -1, np.int32)
+    pid = 1
+    for b, L in enumerate(lengths):
+        for lp in range(-(-(L + 1) // P)):        # decode writes at pos L
+            block[b, lp] = pid
+            top = min(L, (lp + 1) * P)            # partial last page
+            ppos[pid, : max(top - lp * P, 0)] = np.arange(lp * P, top)
+            pid += 1
+    params = init_params(attn_mod.attn_specs(cfg), jax.random.PRNGKey(1),
+                         jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)) * 0.3, jnp.float32)
+    position = jnp.asarray(np.asarray(lengths, np.int32))
+    cache = PagedKVCache(kp, vp, jnp.asarray(ppos), jnp.asarray(block))
+    return cfg, params, x, position, cache
+
+
+@pytest.mark.parametrize("name", ["phi4-mini-3.8b",   # full attention (MHA)
+                                  "gemma2-27b",       # GQA + softcap + local
+                                  "zamba2-2.7b"])     # hybrid shared-attn dims
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_fused_matches_gather_reference(name, window, quantized):
+    lengths = [0, 5, 9, 14]                 # ragged: 1..4 pages, partial tails
+    cfg, params, x, position, cache = _setup(name, lengths,
+                                             quantized=quantized)
+    kv_scale = KV_SCALE if quantized else 0.0
+    o_ref, c_ref = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, window=window, kv_scale=kv_scale,
+        use_kernel=False)
+    o_k, c_k = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, window=window, kv_scale=kv_scale,
+        use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    # the scatter side is shared code: caches must match EXACTLY
+    for a, b in zip(c_ref, c_k):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_window_skips_out_of_band_pages():
+    """With a window, the kernel must ignore pages wholly below the band —
+    scrambling their contents must not change the output (the index map
+    redirects them to the null page; the body guard skips them)."""
+    cfg, params, x, position, cache = _setup("gemma2-27b", [15, 18])
+    window = 6
+    o1, _ = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, window=window, use_kernel=True,
+        interpret=True)
+    # pages 0..1 of each slot hold positions <= 11 <= min(pos) - window
+    dead = np.asarray(cache.block[:, :2]).ravel()
+    kp = cache.kp.at[jnp.asarray(dead)].set(1e3)
+    vp = cache.vp.at[jnp.asarray(dead)].set(-1e3)
+    o2, _ = attn_mod.paged_decode_attention(
+        params, x, position, cache._replace(kp=kp, vp=vp), cfg,
+        window=window, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_active_mask_blocks_inactive_writes(use_kernel):
+    """The stall-free loop's contract: rows with ``active=False`` (slots
+    mid-admission or empty) must not scatter their garbage token into the
+    pool — pages AND ppos stay bit-identical for inactive rows."""
+    cfg, params, x, position, cache = _setup("phi4-mini-3.8b", [6, 9])
+    active = jnp.asarray(np.array([True, False]))
+    _, c_new = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, active=active,
+        use_kernel=use_kernel, interpret=use_kernel)
+    # row 1's tail page (the write target) must be untouched
+    tail1 = int(cache.block[1, 9 // P])
+    np.testing.assert_array_equal(np.asarray(c_new.kp[tail1]),
+                                  np.asarray(cache.kp[tail1]))
+    np.testing.assert_array_equal(np.asarray(c_new.ppos[tail1]),
+                                  np.asarray(cache.ppos[tail1]))
+    # row 0's write DID land
+    tail0 = int(cache.block[0, 6 // P])
+    assert int(c_new.ppos[tail0, 6 % P]) == 6
+
+
+def test_mamba_decode_active_mask_preserves_state():
+    from repro.models import mamba2
+    cfg = get_config("mamba2-780m-smoke")
+    params = init_params(mamba2.mamba_specs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    cache = mamba2.init_mamba_cache(cfg, 2, jnp.float32)
+    cache = mamba2.MambaCache(*(x + 0.5 for x in cache))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 1, cfg.d_model)),
+                    jnp.float32)
+    _, c_new = mamba2.mamba_decode(params, x, cache, cfg,
+                                   active=jnp.asarray([False, True]))
+    for old, new in zip(cache, c_new):
+        np.testing.assert_array_equal(np.asarray(new[0]), np.asarray(old[0]))
+        assert not np.array_equal(np.asarray(new[1]), np.asarray(old[1]))
