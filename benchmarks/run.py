@@ -7,6 +7,8 @@ import time
 
 
 def main() -> None:
+    import types
+
     from benchmarks import (aggregate, breakdown, common, dynamic,
                             interval_sweep, kernel_bench, load_sweep,
                             multiapp, pareto, qos_impact, roofline_table,
@@ -14,11 +16,13 @@ def main() -> None:
     rows = common.Rows()
     t0 = time.time()
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    colocation = types.SimpleNamespace(main=multiapp.colocation_main)
     mods = [("kernels", kernel_bench), ("fig1", pareto),
             ("fig1b", qos_impact), ("fig4", dynamic), ("fig5", aggregate),
-            ("fig7", multiapp), ("fig8", load_sweep),
-            ("fig9", interval_sweep), ("fig10", breakdown),
-            ("serve", serve_qos), ("roofline", roofline_table)]
+            ("fig7", multiapp), ("colocation", colocation),
+            ("fig8", load_sweep), ("fig9", interval_sweep),
+            ("fig10", breakdown), ("serve", serve_qos),
+            ("roofline", roofline_table)]
     for name, mod in mods:
         if only and only != name:
             continue

@@ -2,8 +2,10 @@
 
 This container cannot physically produce cross-tenant interference on a TPU
 pod, so the *latency signal source* is a calibrated queueing model; monitor,
-controller, arbiter and actuator are the real runtime code paths (DESIGN.md
-§2). The batch job's resource *pressures* (fraction of step time saturating
+arbiter, and tenant actuation are the REAL runtime code paths (DESIGN.md
+§2, §11) — each job is wrapped in a ``core.tenant.SimTenant`` and driven by
+the same ``core.arbiter`` classes that drive the serve/train runtimes. The
+batch job's resource *pressures* (fraction of step time saturating
 HBM / ICI / MXU) come from the compiled dry-run's roofline terms per variant.
 
 Model:
@@ -18,16 +20,16 @@ lenient): per-token LLM decode ("memcached-like"), interactive search prefill
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import (Action, ControllerConfig, PliantController,
-                                   RoundRobinArbiter)
+from repro.core.arbiter import InterferenceAwareArbiter, RoundRobinArbiter
+from repro.core.controller import ControllerConfig
 from repro.core.monitor import LatencyMonitor
-from repro.core.variants import ResourcePressure, Variant, VariantTable
+from repro.core.tenant import SimTenant
+from repro.core.variants import ResourcePressure, VariantTable
 
 
 @dataclass(frozen=True)
@@ -40,6 +42,17 @@ class ServiceProfile:
     sens_ici: float              # sensitivity to ICI pressure
     qps_at_saturation: float
     chips_boost: float = 0.045   # capacity gain per reclaimed chip-group
+    sens_flops: float = 0.05     # sensitivity to MXU/compute pressure (the
+                                 # p99 model is mem+ici; this only steers
+                                 # the arbiter's contention attribution)
+
+    @property
+    def sensitivity(self) -> ResourcePressure:
+        """The service's per-resource sensitivity vector, in the same
+        ``ResourcePressure`` coordinates the tenants report pressure in —
+        the interference-aware arbiter's attribution input."""
+        return ResourcePressure(hbm=self.sens_mem, ici=self.sens_ici,
+                                flops=self.sens_flops)
 
     def p99_iso(self, rho: float) -> float:
         rho = min(rho, 0.995)
@@ -73,6 +86,42 @@ SERVICES = {
 # paper analogue mapping (DESIGN.md §2)
 PAPER_ANALOGUE = {"token-serve": "memcached", "search-prefill": "NGINX",
                   "embed-api": "MongoDB"}
+
+# Three contention ARCHETYPES for the arbiter comparison (dry-run-shaped
+# baseline roofline terms): an HBM-bound dense job, an ICI-bound MoE job
+# (all-to-all dominant), and a compute-bound SSM job. Victim selection only
+# matters when tenants press on DIFFERENT resources — the stock analytic
+# baseline gives every train job near-identical pressure ratios, which
+# would measure nothing but noise.
+CONTENTION_ARCHETYPES = {
+    "phi4-mini-3.8b": dict(compute_s=0.8, memory_s=1.6, collective_s=0.3),
+    "olmoe-1b-7b": dict(compute_s=0.9, memory_s=0.7, collective_s=1.7),
+    "mamba2-780m": dict(compute_s=1.5, memory_s=0.8, collective_s=0.25),
+}
+
+
+_ARCHETYPE_TABLES: dict = {}
+
+
+def archetype_jobs(total_work: float = 5000.0) -> List["BatchJob"]:
+    """The heterogeneous steady-state mix the round-robin vs interference-
+    aware comparison runs on (tests + benchmarks/multiapp.py). ``total_work``
+    outlasts the horizon so the two arbiters are compared over identical
+    denominators — a faster-finishing mix would pad its own met-fraction
+    with quiet tail intervals. Tables are deterministic, so they are
+    explored once and shared; only the (mutable-state) BatchJobs are fresh
+    per call."""
+    if not _ARCHETYPE_TABLES:
+        from repro.configs import SHAPES, get_config
+        from repro.core.explorer import explore
+        for arch, art in CONTENTION_ARCHETYPES.items():
+            _ARCHETYPE_TABLES[arch] = explore(
+                get_config(arch), SHAPES["train_4k"], baseline_art=art)
+    rng = np.random.default_rng(5)
+    return [BatchJob(arch, _ARCHETYPE_TABLES[arch], total_work=total_work,
+                     phase_offset=float(rng.uniform(0, 2 * np.pi)),
+                     phase_period=float(rng.uniform(50, 120)))
+            for arch in CONTENTION_ARCHETYPES]
 
 
 @dataclass
@@ -165,20 +214,38 @@ def simulate(service: ServiceProfile, jobs: List[BatchJob], *,
              load_frac: float = 0.775, horizon_s: float = 420.0,
              interval_s: float = 1.0, precise_only: bool = False,
              seed: int = 0, slack_threshold: float = 0.10,
-             samples_per_interval: int = 2000) -> SimResult:
-    """Decision-interval simulation of one colocation."""
+             samples_per_interval: int = 2000,
+             arbiter: str = "round_robin") -> SimResult:
+    """Decision-interval simulation of one colocation.
+
+    ``arbiter`` selects the victim policy over the SAME arbiter code path
+    the real serve/train runtimes use (``core/arbiter.py``): the paper's
+    ``"round_robin"`` baseline, or ``"interference"`` — contended-resource
+    attribution from the service's sensitivity vector, victims scored by
+    contended pressure relieved (violation side) and by quality recovered
+    per pressure added (slack side). Reclaim budgets are per tenant (each
+    job's own ``chip_groups - 1``), not sized from ``jobs[0]``.
+    """
     rng = np.random.default_rng(seed)
     monitor = LatencyMonitor(service.qos_target_s,
                              window=2 * samples_per_interval)
+    # no max_reclaim here: budgets are PER TENANT (from_tenants reads each
+    # SimTenant's chip_groups - 1) — sizing a shared one from jobs[0] was
+    # exactly the heterogeneous-jobs bug this field would re-invite
     cfg = ControllerConfig(slack_threshold=slack_threshold,
-                           decision_interval_s=interval_s,
-                           max_reclaim=jobs[0].chip_groups - 1)
+                           decision_interval_s=interval_s)
     multi = len(jobs) > 1
-    if multi:
-        ctl = RoundRobinArbiter([len(j.table) for j in jobs], cfg,
-                                start=int(rng.integers(len(jobs))))
+    tenants = [SimTenant(j) for j in jobs]
+    if arbiter == "interference":
+        ctl = InterferenceAwareArbiter.from_tenants(
+            tenants, cfg, sensitivity=service.sensitivity)
+    elif arbiter == "round_robin":
+        # paper: first victim selected randomly (single-job sims skip the
+        # draw so their noise streams match the historical calibration)
+        ctl = RoundRobinArbiter.from_tenants(
+            tenants, cfg, start=int(rng.integers(len(jobs))) if multi else 0)
     else:
-        ctl = PliantController(len(jobs[0].table), cfg)
+        raise ValueError(f"unknown arbiter {arbiter!r}")
 
     timeline: List[TimelinePoint] = []
     t = 0.0
@@ -194,24 +261,20 @@ def simulate(service: ServiceProfile, jobs: List[BatchJob], *,
         # control acts on the (sampled, noisy) monitor estimate — realistic;
         # the timeline records the REALIZED p99 the interval's requests saw.
         p99_real = float(np.percentile(lat, 99))
-        p99_obs = monitor.p99() or p99_real
-        violated = p99_obs > service.qos_target_s
-        slack = (service.qos_target_s - p99_obs) / service.qos_target_s
 
         action = "hold"
         if not precise_only:
-            if multi:
-                act, idx = ctl.tick(violated, slack)
-                if idx is not None:
-                    jobs[idx].variant = ctl.states[idx].variant
-                    jobs[idx].reclaimed = ctl.states[idx].reclaimed
-                action = f"{act.value}:{idx}" if idx is not None else act.value
-            else:
-                act = ctl.tick(violated, slack)
-                jobs[0].variant = ctl.state.variant
-                jobs[0].reclaimed = ctl.state.reclaimed
-                action = act.value
-            monitor.reset_window()   # act on fresh data next interval
+            # consume the decision window (act on fresh data next interval);
+            # below min_samples the estimator abstains -> realized fallback
+            p99_mon, _, _ = monitor.consume_window()
+            p99_obs = p99_mon if p99_mon is not None else p99_real
+            violated = p99_obs > service.qos_target_s
+            slack = (service.qos_target_s - p99_obs) / service.qos_target_s
+            # the arbiter actuates the SimTenants directly — the same code
+            # path PliantRuntime drives for the real serve/train tenants
+            act, idx = ctl.tick(violated, slack, t=t)
+            action = f"{act.value}:{idx}" if (multi and idx is not None) \
+                else act.value
 
         for j in jobs:
             j.advance(interval_s, t + interval_s)

@@ -15,13 +15,14 @@ decision interval:
 
 The "jump to most approximate on violation, step back gradually" asymmetry is
 the paper's anti-ping-pong hysteresis; the slack threshold (default 10%)
-controls agility (§4.3, Fig. 9 sensitivity).
+controls agility (§4.3, Fig. 9 sensitivity). Multi-tenant victim selection
+lives in ``core/arbiter.py`` (round-robin baseline + interference-aware),
+sharing this same per-tenant hysteresis.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
 
 
 class Action(enum.Enum):
@@ -37,6 +38,7 @@ class ControllerConfig:
     slack_threshold: float = 0.10
     decision_interval_s: float = 1.0
     max_reclaim: int = 8            # reclaimable quanta (chip-groups / pages)
+    history_limit: int = 2048       # decision-history ring size (PliantRuntime)
 
 
 @dataclass
@@ -81,49 +83,11 @@ class PliantController:
         return Action.HOLD
 
 
-@dataclass
-class RoundRobinArbiter:
-    """Multi-application colocation (paper §4.4): approximate one app at a
-    time round-robin; only when ALL run most-approximate, reclaim chips one
-    app and one chip-group at a time — no app penalized disproportionately."""
-    n_variants_per_app: List[int]
-    cfg: ControllerConfig = field(default_factory=ControllerConfig)
-    start: int = 0                  # paper: first victim selected randomly
-    states: List[AppState] = field(init=False)
-    _cursor: int = field(init=False)
-
-    def __post_init__(self):
-        self.states = [AppState(n) for n in self.n_variants_per_app]
-        self._cursor = self.start % len(self.states)
-
-    def _next(self, pred) -> Optional[int]:
-        n = len(self.states)
-        for d in range(n):
-            i = (self._cursor + d) % n
-            if pred(self.states[i]):
-                self._cursor = (i + 1) % n
-                return i
-        return None
-
-    def tick(self, qos_violated: bool, slack: float
-             ) -> Tuple[Action, Optional[int]]:
-        if qos_violated:
-            i = self._next(lambda s: s.variant < s.most_approx)
-            if i is not None:
-                self.states[i].variant = self.states[i].most_approx
-                return Action.SET_MOST_APPROX, i
-            i = self._next(lambda s: s.reclaimed < self.cfg.max_reclaim)
-            if i is not None:
-                self.states[i].reclaimed += 1
-                return Action.RECLAIM_CHIPS, i
-            return Action.HOLD, None
-        if slack > self.cfg.slack_threshold:
-            i = self._next(lambda s: s.reclaimed > 0)
-            if i is not None:
-                self.states[i].reclaimed -= 1
-                return Action.RETURN_CHIPS, i
-            i = self._next(lambda s: s.variant > 0)
-            if i is not None:
-                self.states[i].variant -= 1
-                return Action.STEP_PRECISE, i
-        return Action.HOLD, None
+def __getattr__(name):
+    # RoundRobinArbiter moved to core/arbiter.py (one interface with the
+    # InterferenceAwareArbiter); lazy re-export keeps old imports working
+    # without a circular import in either direction.
+    if name == "RoundRobinArbiter":
+        from repro.core.arbiter import RoundRobinArbiter
+        return RoundRobinArbiter
+    raise AttributeError(name)

@@ -93,6 +93,19 @@ class LatencyMonitor:
     def reset_window(self) -> None:
         self._buf.clear()
 
+    def consume_window(self):
+        """One decision boundary: read the closing window's ``(p99,
+        violated, slack)`` and reset so the next decision acts on fresh
+        data. This is THE reset-window convention — ``PliantRuntime.
+        maybe_decide`` and ``colocation.simulate`` both consume through
+        here instead of each hand-rolling read-then-reset."""
+        p = self.p99()
+        violated = p is not None and p > self.qos_target_s
+        slack = 0.0 if p is None \
+            else (self.qos_target_s - p) / self.qos_target_s
+        self.reset_window()
+        return p, violated, slack
+
     @property
     def sample_rate(self) -> float:
         return self._rate

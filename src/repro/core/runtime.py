@@ -1,70 +1,132 @@
-"""PliantRuntime: monitor -> controller -> actuator glue for REAL runs.
+"""PliantRuntime: monitor -> arbiter -> tenant glue for REAL runs.
 
-Used by ``launch/train.py`` and the examples: the batch job executes its
-current variant's compiled step; every decision interval (wall-clock deadline
-— a straggling step cannot delay control decisions, the controller simply
-acts at the next boundary) the controller reads the monitor and the actuator
-switches the executable and/or triggers elastic chip reclamation via the
-provided ``reshard_fn``.
+A thin shell over an ``Arbiter`` and a tenant list: every decision interval
+(wall-clock deadline — a straggling step cannot delay control decisions, the
+runtime simply acts at the next boundary) it consumes the monitor's window
+and lets the arbiter pick and actuate one victim move. All actuation goes
+through the ``Tenant`` protocol (``core/tenant.py``): executable hot-swap,
+chip-group reshard, page-pool reclaim — the runtime no longer special-cases
+any of them.
+
+Backward-compatible single-tenant construction: ``PliantRuntime(table,
+monitor, cfg, reshard_fn=...)`` wraps the table in a ``TrainTenant`` (budget
+0 without a reshard actuator, so the controller never burns intervals on
+phantom RECLAIM/RETURN actions) under a single-tenant round-robin arbiter —
+which is exactly the Fig. 3 ``PliantController`` policy. Multi-tenant:
+``PliantRuntime(monitor=m, cfg=c, tenants=[...], arbiter=...)``.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Deque, List, Optional
 
-from repro.core.controller import (Action, ControllerConfig, PliantController)
+from repro.core.arbiter import Arbiter, RoundRobinArbiter
+from repro.core.controller import Action, ControllerConfig
 from repro.core.monitor import LatencyMonitor
+from repro.core.tenant import Tenant, TrainTenant
 from repro.core.variants import VariantTable
 
 
 @dataclass
 class PliantRuntime:
-    table: VariantTable
-    monitor: LatencyMonitor
+    table: Optional[VariantTable] = None
+    monitor: LatencyMonitor = None
     cfg: ControllerConfig = field(default_factory=ControllerConfig)
     reshard_fn: Optional[Callable[[int], None]] = None   # reclaimed groups
-    controller: PliantController = field(init=False)
+    tenants: Optional[List[Tenant]] = None
+    arbiter: Optional[Arbiter] = None
     _last_decision: float = field(init=False)
-    history: List[dict] = field(default_factory=list)
+    _auto_tenant: bool = field(init=False, default=False)
+    history: Deque[dict] = field(init=False)
 
     def __post_init__(self):
-        if self.reshard_fn is None and self.cfg.max_reclaim:
-            # no actuator for chip reclamation: without this cap the
-            # controller burns decision intervals on phantom RECLAIM/RETURN
-            # actions before it will step back toward precise
-            import dataclasses
-            self.cfg = dataclasses.replace(self.cfg, max_reclaim=0)
-        self.controller = PliantController(len(self.table), self.cfg)
+        if self.tenants is None:
+            assert self.table is not None, \
+                "PliantRuntime needs a table (single-tenant) or tenants"
+            budget = self.cfg.max_reclaim if self.reshard_fn is not None \
+                else 0
+            self.tenants = [TrainTenant(self.table, reshard_fn=self.reshard_fn,
+                                        max_reclaim=budget)]
+            self._auto_tenant = True
+            self._sync_cfg_budget()
+        elif self.table is None:
+            self.table = self.tenants[0].table
+        if self.arbiter is None:
+            self.arbiter = RoundRobinArbiter.from_tenants(self.tenants,
+                                                          self.cfg)
+        self.history = collections.deque(maxlen=self.cfg.history_limit)
         self._last_decision = time.monotonic()
+
+    def _sync_cfg_budget(self) -> None:
+        """Single-tenant compat: ``cfg.max_reclaim`` mirrors the tenant's
+        own budget (callers/tests read it as THE reclaim budget)."""
+        if len(self.tenants) == 1 \
+                and self.tenants[0].max_reclaim != self.cfg.max_reclaim:
+            self.cfg = dataclasses.replace(
+                self.cfg, max_reclaim=self.tenants[0].max_reclaim)
+            if self.arbiter is not None:
+                self.arbiter.cfg = self.cfg
+
+    # ------------------------------------------------------------- binding --
+
+    def bind(self, tenant: Tenant, index: int = 0) -> None:
+        """Replace a tenant (the auto-built placeholder, usually) with a
+        real adapter — e.g. the serve engine binding itself at construction.
+        Rebuilds the arbiter, so it is construction-time only: after any
+        decision the arbiter's variant/reclaimed ledger and the tenants'
+        actuated state would silently diverge (reclaimed quanta never
+        returned)."""
+        from repro.core.arbiter import InterferenceAwareArbiter
+        assert not self.history, \
+            "bind() after decisions would discard the arbiter ledger"
+        self.tenants[index] = tenant
+        kw = {}
+        if isinstance(self.arbiter, RoundRobinArbiter):
+            kw["start"] = self.arbiter.start
+        if isinstance(self.arbiter, InterferenceAwareArbiter):
+            kw["sensitivity"] = self.arbiter.sensitivity
+        self.arbiter = type(self.arbiter).from_tenants(self.tenants,
+                                                       self.cfg, **kw)
+        self._auto_tenant = False
+        if index == 0 and tenant.table is not None:
+            self.table = tenant.table
+        self._sync_cfg_budget()
+
+    @property
+    def auto_tenant(self) -> bool:
+        """True while tenant 0 is the constructor's placeholder wrap."""
+        return self._auto_tenant
 
     def attach_reclaimer(self, fn: Callable[[int], None],
                          max_reclaim: Optional[int] = None) -> None:
-        """Late-bind a reclaim actuator and restore the reclaim budget.
-
-        Construction order often puts the actuator after the runtime (the
-        serve engine builds its page pool with the runtime already in hand),
-        so ``__post_init__`` has zeroed ``max_reclaim`` by the time the
-        actuator exists. ``fn(k)`` is called with the controller's current
-        reclaimed-quanta count — chip-groups for train jobs (``reshard_fn``),
-        page-pool quanta for paged serving (``PagePool.set_reclaimed``).
-        """
-        import dataclasses
+        """Late-bind a reclaim actuator on tenant 0 and restore its budget
+        (construction order often puts the actuator after the runtime).
+        ``fn(k)`` receives the ABSOLUTE reclaimed-quanta count on every
+        RECLAIM/RETURN, whatever adapter tenant 0 is (a bound ServeTenant
+        chains it after its own pool actuation)."""
         self.reshard_fn = fn
+        self.tenants[0].rebind(fn, max_reclaim)
         if max_reclaim is not None:
-            self.cfg = dataclasses.replace(self.cfg, max_reclaim=max_reclaim)
-            self.controller.cfg = self.cfg
+            self.arbiter.set_budget(0, self.tenants[0].max_reclaim)
+            self._sync_cfg_budget()
+
+    # --------------------------------------------------------------- state --
 
     @property
     def active_variant(self) -> int:
-        return self.controller.state.variant
+        return self.arbiter.states[0].variant
 
     @property
     def reclaimed(self) -> int:
-        return self.controller.state.reclaimed
+        return self.arbiter.states[0].reclaimed
 
     def step_executable(self) -> Any:
         return self.table.executable(self.active_variant)
+
+    # ----------------------------------------------------------- decisions --
 
     def maybe_decide(self, now: Optional[float] = None) -> Optional[Action]:
         """Deadline-based decision tick; call once per batch step boundary."""
@@ -72,16 +134,15 @@ class PliantRuntime:
         if now - self._last_decision < self.cfg.decision_interval_s:
             return None
         self._last_decision = now
-        violated = self.monitor.qos_violated()
-        slack = self.monitor.slack()
-        before = self.reclaimed
-        action = self.controller.tick(violated, slack)
-        if action in (Action.RECLAIM_CHIPS, Action.RETURN_CHIPS) \
-                and self.reshard_fn is not None:
-            self.reshard_fn(self.reclaimed)
+        # one reset-window convention for every control plane (sim included):
+        # read the closing window, act on it, start the next one fresh
+        _, violated, slack = self.monitor.consume_window()
+        action, victim = self.arbiter.tick(violated, slack, t=now)
         self.history.append({
-            "t": now, "action": action.value, "variant": self.active_variant,
-            "reclaimed": self.reclaimed, "violated": violated,
-            "slack": slack})
-        self.monitor.reset_window()
+            "t": now, "action": action.value, "victim": victim,
+            "variant": self.active_variant, "reclaimed": self.reclaimed,
+            "variants": tuple(s.variant for s in self.arbiter.states),
+            "reclaimed_all": tuple(s.reclaimed
+                                   for s in self.arbiter.states),
+            "violated": violated, "slack": slack})
         return action

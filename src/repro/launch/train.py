@@ -26,6 +26,7 @@ from repro.core.colocation import SERVICES
 from repro.core.explorer import explore
 from repro.core.monitor import LatencyMonitor
 from repro.core.runtime import PliantRuntime
+from repro.core.tenant import TrainTenant
 from repro.core.variants import VariantTable
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ShapeConfig
@@ -87,7 +88,11 @@ def main(argv=None):
     build_variant_steps(cfg, table, opt_cfg, mesh=mesh)
 
     monitor = LatencyMonitor(SERVICES["token-serve"].qos_target_s)
-    runtime = PliantRuntime(table, monitor)
+    # the train job as a first-class Tenant (no elastic reshard actuator on
+    # a single host, so its quanta budget is 0 — variant knob only); the
+    # same tenant drops into launch/colocate.py's multi-tenant arbiter
+    runtime = PliantRuntime(monitor=monitor,
+                            tenants=[TrainTenant(table, name="train")])
     runtime.cfg.decision_interval_s = args.decision_interval
 
     data_cfg = DataConfig(cfg.vocab_size, args.seq, args.batch,

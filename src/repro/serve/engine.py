@@ -17,9 +17,10 @@ Two cache data models, selected by ``paged``:
   shared prompt-prefix pages copy-on-write — a prefix hit SKIPS those
   prefill chunks entirely — and prefills the remainder straight into the
   pool; completion returns pages to the free list. The pool budget is a
-  Pliant knob: when a ``PliantRuntime`` is attached its RECLAIM/RETURN
-  actions shrink/regrow ``pool_pages`` (``attach_reclaimer``), evicting
-  prefix-cache pages first and never touching live requests.
+  Pliant knob: the engine binds itself to an attached ``PliantRuntime`` as
+  a ``core.tenant.ServeTenant`` whose reclaimable quanta are pool pages —
+  RECLAIM/RETURN shrink/regrow ``pool_pages``, evicting prefix-cache pages
+  first and never touching live requests.
 
 The paged loop is **stall-free**: admission prefill no longer runs to
 completion inside ``step()``. Each step advances AT MOST ONE bounded chunk
@@ -42,9 +43,12 @@ Serving variants come from a ``VariantTable`` (the explorer's serving grid):
 every variant's decode executable is registered up front and the active one
 is swapped at a step boundary — an O(µs) dictionary lookup, the DynamoRIO
 function-pointer swap analogue. When a ``PliantRuntime`` is attached, the
-engine feeds per-token latency to its ``LatencyMonitor`` and actuates the
-controller's decisions, converting cache dtype when a swap crosses the
-``kv_quant`` boundary. Under a mesh, params shard via
+engine feeds per-token latency to its ``LatencyMonitor``, ticks the arbiter
+at step boundaries, and receives its decisions back through the tenant
+protocol (``request_variant`` — deferred while an admission is in flight),
+converting cache dtype when a swap crosses the ``kv_quant`` boundary. A
+multi-tenant runtime (``launch/colocate.py``) attaches the same way via
+``attach_runtime``. Under a mesh, params shard via
 ``dist.param_shardings`` and caches via ``dist.cache_shardings``.
 """
 from __future__ import annotations
@@ -62,6 +66,7 @@ import numpy as np
 
 from repro.approx.knobs import ApproxKnobs, PRECISE
 from repro.configs.base import LOCAL_ATTN, MAMBA, ModelConfig, ShapeConfig
+from repro.core import tenant as tenant_mod
 from repro.core.runtime import PliantRuntime
 from repro.core.variants import VariantTable
 from repro.models import lm
@@ -200,13 +205,21 @@ class ServeEngine:
         self.swaps: List[Tuple[int, int]] = []   # (step index, variant index)
         self._token_lat: List[float] = []        # unflushed monitor samples
         self._rng = np.random.default_rng(self.seed)
-        if (self.paged and self.runtime is not None
+        self._pending_variant: Optional[int] = None
+        self._tenant = None
+        self._bound = False
+        if (self.runtime is not None and self.runtime.auto_tenant
                 and self.runtime.reshard_fn is None):
-            # expose pool_pages as the runtime's reclaimable knob: RECLAIM
-            # shrinks the page budget (prefix cache evicted first), RETURN
-            # grows it back
-            self.runtime.attach_reclaimer(self.pool.set_reclaimed,
-                                          max_reclaim=self.pool.max_quanta)
+            # bind this engine as the runtime's tenant (replacing the
+            # constructor's placeholder wrap — unless the caller supplied
+            # their own reshard actuator, which stays in charge of quanta):
+            # variant hot-swaps arrive via ``request_variant`` and — for
+            # paged engines — pool_pages is the tenant's reclaimable quanta
+            # (RECLAIM shrinks the page budget, prefix cache evicted first;
+            # RETURN grows it back)
+            self._tenant = tenant_mod.ServeTenant(engine=self)
+            self.runtime.bind(self._tenant)
+            self._bound = True
 
     # ------------------------------------------------------------ variants --
 
@@ -236,6 +249,42 @@ class ServeEngine:
             self.pool.flush_prefixes()
         self._active = idx
         self.swaps.append((len(self.step_latencies), idx))
+
+    def request_variant(self, idx: int) -> None:
+        """Tenant-protocol actuation: hot-swap at the next SAFE step
+        boundary. Swaps are deferred while an admission is in flight — a
+        mid-prompt knob change would mix admission executables (and prefix
+        tags) within one request."""
+        self._pending_variant = idx
+        self._apply_pending_variant()
+
+    def _apply_pending_variant(self) -> None:
+        if self._pending_variant is None or self._admission is not None:
+            return
+        idx, self._pending_variant = self._pending_variant, None
+        if idx != self._active:
+            self.set_variant(idx)
+
+    def attach_runtime(self, runtime: PliantRuntime,
+                       tenant=None) -> None:
+        """Attach a pre-built (multi-tenant) runtime AFTER construction —
+        the colocate harness builds engine -> ServeTenant -> runtime in
+        that order. The engine then drives the control loop (latency feed
+        + decision ticks at its step boundaries); actuation arrives back
+        through ``tenant`` (this engine's adapter in the runtime's list,
+        located automatically when omitted). A multi-tenant runtime MUST
+        contain this engine's adapter: the unbound fallback polls
+        ``states[0]``, which would apply ANOTHER tenant's variant index to
+        this engine."""
+        if tenant is None:
+            tenant = next((t for t in runtime.tenants
+                           if isinstance(t, tenant_mod.ServeTenant)
+                           and t.engine is self), None)
+        assert tenant is not None or len(runtime.tenants) == 1, \
+            "multi-tenant runtime has no ServeTenant for this engine"
+        self.runtime = runtime
+        self._tenant = tenant
+        self._bound = tenant is not None
 
     def retire_variant(self, idx: int) -> None:
         """Drop a retired table entry's executables. Admission cells are
@@ -634,8 +683,14 @@ class ServeEngine:
             self.runtime.monitor.record_many(self._token_lat)
             self._token_lat.clear()
         self.runtime.maybe_decide()
-        if (self.runtime.active_variant != self._active
+        if self._bound:
+            # actuation arrived via the tenant adapter (request_variant);
+            # apply any swap deferred by an in-flight admission
+            self._apply_pending_variant()
+        elif (self.runtime.active_variant != self._active
                 and self._admission is None):
+            # runtime owned by someone else (no tenant binding): follow its
+            # decision state by polling, as before the tenant protocol
             self.set_variant(self.runtime.active_variant)
 
     @property

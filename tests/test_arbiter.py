@@ -1,0 +1,341 @@
+"""Multi-tenant control plane: Tenant protocol, arbiter fairness/liveness
+(per-tenant budgets, no starvation, eventual return to precise), and the
+interference-aware victim selection math — property-based where the
+invariant is over a space (hypothesis)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.arbiter import InterferenceAwareArbiter, RoundRobinArbiter
+from repro.core.controller import Action, ControllerConfig
+from repro.core.tenant import Tenant
+from repro.core.variants import ResourcePressure
+
+
+class StubTenant(Tenant):
+    """Protocol-complete tenant with explicit ladders (no VariantTable):
+    ``pressures[v]`` is the variant's roofline pressure, scaled by the
+    share of quanta still held, like every real adapter."""
+
+    def __init__(self, name, qlosses, pressures, budget=0, n_quanta=None):
+        assert len(qlosses) == len(pressures)
+        self.name = name
+        self._ql = list(qlosses)
+        self._pr = list(pressures)
+        self.max_reclaim = budget
+        self.n_quanta = n_quanta if n_quanta is not None else budget + 1
+        self._variant = 0
+        self._reclaimed = 0
+
+    @property
+    def n_variants(self):
+        return len(self._ql)
+
+    def quality_loss(self, variant=None):
+        return self._ql[self.variant if variant is None else variant]
+
+    def pressure(self, t=0.0, variant=None):
+        v = self.variant if variant is None else variant
+        return self._pr[v].scaled(self.share())
+
+
+def P(h, i=0.1, f=0.3):
+    return ResourcePressure(hbm=h, ici=i, flops=f)
+
+
+def mk_tenants(n_apps=3, n_variants=4, budgets=(2, 5, 1)):
+    """Heterogeneous ladder: tenant k's hbm pressure falls from 1/(k+1) at
+    precise to a fifth of that at most-approximate."""
+    out = []
+    for k in range(n_apps):
+        top = 1.0 / (k + 1)
+        prs = [P(top * (1 - 0.8 * v / max(n_variants - 1, 1)))
+               for v in range(n_variants)]
+        qls = [0.01 * v * (k + 1) for v in range(n_variants)]
+        out.append(StubTenant(f"t{k}", qls, prs, budget=budgets[k]))
+    return out
+
+
+def mk_arbiter(kind, tenants, cfg=None):
+    cfg = cfg or ControllerConfig()
+    if kind == "interference":
+        return InterferenceAwareArbiter.from_tenants(
+            tenants, cfg, sensitivity=P(0.6, 0.25, 0.05))
+    return RoundRobinArbiter.from_tenants(tenants, cfg)
+
+
+ARBS = ["round_robin", "interference"]
+
+
+# -------------------------------------------------------- tenant protocol --
+
+def test_tenant_state_and_actuation_bounds():
+    t = StubTenant("x", [0.0, 0.01, 0.02], [P(1.0), P(0.6), P(0.2)],
+                   budget=2, n_quanta=4)
+    t.set_variant(2)
+    assert t.variant == 2 and t.quality_loss() == 0.02
+    t.reclaim()
+    t.reclaim()
+    t.reclaim()                      # clamped at budget
+    assert t.reclaimed == 2
+    assert t.share() == pytest.approx(0.5)
+    # pressure scales with both the variant ladder and the held share
+    assert t.pressure().hbm == pytest.approx(0.2 * 0.5)
+    t.return_quanta(5)               # clamped at zero
+    assert t.reclaimed == 0
+    assert t.pressure(variant=0).hbm == pytest.approx(1.0)
+
+
+# -------------------------------------------------- budgets and fairness --
+
+@pytest.mark.parametrize("kind", ARBS)
+def test_per_tenant_budgets_respected(kind):
+    """Heterogeneous tenants get their OWN reclaim budgets — not a shared
+    one sized from the first tenant (the old colocation bug)."""
+    tenants = mk_tenants(budgets=(2, 5, 1))
+    arb = mk_arbiter(kind, tenants)
+    for _ in range(60):
+        arb.tick(True, -0.5)
+    assert [s.reclaimed for s in arb.states] == [2, 5, 1]
+    assert [t.reclaimed for t in tenants] == [2, 5, 1]
+    assert all(s.variant == s.most_approx for s in arb.states)
+
+
+@pytest.mark.parametrize("kind", ARBS)
+def test_sustained_slack_returns_all_to_precise(kind):
+    """Liveness: after any violation prefix, sustained slack walks every
+    tenant back to precise with all quanta returned, within the move
+    budget (one move per interval)."""
+    tenants = mk_tenants()
+    arb = mk_arbiter(kind, tenants)
+    for _ in range(40):
+        arb.tick(True, -0.5)
+    moves = sum(s.variant for s in arb.states) \
+        + sum(s.reclaimed for s in arb.states)
+    for _ in range(moves + 1):
+        arb.tick(False, 0.5)
+    assert all(s.variant == 0 and s.reclaimed == 0 for s in arb.states)
+    assert all(t.variant == 0 and t.reclaimed == 0 for t in tenants)
+
+
+@pytest.mark.parametrize("kind", ARBS)
+def test_no_starvation_and_progress(kind):
+    """Under sustained violation every tick makes progress while ANY move
+    remains (no HOLD with moves available), and every tenant eventually
+    reaches most-approximate — no tenant is passed over forever."""
+    tenants = mk_tenants()
+    arb = mk_arbiter(kind, tenants)
+    total_moves = sum(t.n_variants > 1 for t in tenants) \
+        + sum(t.max_reclaim for t in tenants)
+    for k in range(total_moves):
+        act, idx = arb.tick(True, -0.5)
+        assert act != Action.HOLD and idx is not None, \
+            f"held at move {k} with moves remaining"
+    assert all(s.variant == s.most_approx for s in arb.states)
+    assert all(s.reclaimed == arb.budget(i)
+               for i, s in enumerate(arb.states))
+    assert arb.tick(True, -0.5) == (Action.HOLD, None)
+
+
+# ------------------------------------------- interference-aware selection --
+
+def test_interference_jump_picks_contended_resource_victim():
+    """HBM-sensitive service + one HBM-heavy and one ICI-heavy tenant: the
+    jump victim is the HBM hog, not the cursor head."""
+    hbm_hog = StubTenant("hbm", [0.0, 0.02], [P(1.0, 0.1), P(0.2, 0.1)])
+    ici_hog = StubTenant("ici", [0.0, 0.02],
+                         [ResourcePressure(0.2, 1.0, 0.3),
+                          ResourcePressure(0.1, 0.2, 0.2)])
+    arb = InterferenceAwareArbiter.from_tenants(
+        [ici_hog, hbm_hog], ControllerConfig(),
+        sensitivity=P(0.8, 0.1, 0.05))
+    assert arb.contended_axis(0.0) == "hbm"
+    act, idx = arb.tick(True, -0.5)
+    assert (act, idx) == (Action.SET_MOST_APPROX, 1)
+    # ICI-sensitive service attributes the other way
+    arb2 = InterferenceAwareArbiter.from_tenants(
+        [ici_hog, hbm_hog], ControllerConfig(),
+        sensitivity=ResourcePressure(0.05, 0.9, 0.05))
+    # (fresh states: the tenants were actuated above — reset them)
+    ici_hog._variant = hbm_hog._variant = 0
+    assert arb2.contended_axis(0.0) == "ici"
+    act, idx = arb2.tick(True, -0.5)
+    assert (act, idx) == (Action.SET_MOST_APPROX, 0)
+
+
+def test_interference_step_back_buys_quality_cheapest_first():
+    """Under slack, the first step toward precise goes to the tenant whose
+    de-approximation adds the least contended pressure per quality gained
+    (here: the ICI-heavy tenant, invisible on the contended HBM axis)."""
+    hbm_hog = StubTenant("hbm", [0.0, 0.02], [P(1.0, 0.1), P(0.2, 0.1)])
+    ici_hog = StubTenant("ici", [0.0, 0.02],
+                         [ResourcePressure(0.15, 1.0, 0.3),
+                          ResourcePressure(0.1, 0.2, 0.2)])
+    arb = InterferenceAwareArbiter.from_tenants(
+        [hbm_hog, ici_hog], ControllerConfig(),
+        sensitivity=P(0.8, 0.1, 0.05))
+    arb.tick(True, -0.5)
+    arb.tick(True, -0.5)             # both jump to most-approximate
+    act, idx = arb.tick(False, 0.5)
+    assert (act, idx) == (Action.STEP_PRECISE, 1), (act, idx)
+
+
+def test_interference_reclaim_prefers_per_quantum_relief():
+    """Reclaim victimizes the tenant shedding the most contended pressure
+    per quantum: same ladder, but one tenant spreads it over 4x the
+    quanta."""
+    a = StubTenant("wide", [0.0], [P(1.0)], budget=3, n_quanta=16)
+    b = StubTenant("narrow", [0.0], [P(1.0)], budget=3, n_quanta=4)
+    arb = InterferenceAwareArbiter.from_tenants(
+        [a, b], ControllerConfig(), sensitivity=P(0.8, 0.1, 0.05))
+    act, idx = arb.tick(True, -0.5)
+    assert (act, idx) == (Action.RECLAIM_CHIPS, 1)
+
+
+# ------------------------------------------------------------- runtime --
+
+def _runtime(**kw):
+    from repro.core.monitor import LatencyMonitor
+    from repro.core.runtime import PliantRuntime
+    monitor = LatencyMonitor(qos_target_s=1.0, min_samples=4)
+    return PliantRuntime(monitor=monitor, **kw), monitor
+
+
+def test_runtime_history_bounded():
+    """Long-running control loops must not grow history without bound."""
+    cfg = ControllerConfig(decision_interval_s=0.0, history_limit=32)
+    tenants = [StubTenant("a", [0.0, 0.01], [P(1.0), P(0.5)])]
+    rt, monitor = _runtime(cfg=cfg, tenants=tenants)
+    for k in range(200):
+        monitor.record_many(np.full(8, 2.0 if k % 2 else 0.1))
+        rt.maybe_decide()
+    assert len(rt.history) == 32
+    assert rt.history.maxlen == 32
+
+
+def test_runtime_multi_tenant_dispatch():
+    """The runtime drives the arbiter over BOTH tenants: sustained
+    violation approximates both and actuates each adapter; sustained slack
+    walks both back (same ledger the sim uses)."""
+    cfg = ControllerConfig(decision_interval_s=0.0)
+    tenants = mk_tenants(2, 3, budgets=(1, 2))
+    arb = mk_arbiter("interference", tenants, cfg)
+    rt, monitor = _runtime(cfg=cfg, tenants=tenants, arbiter=arb)
+    for _ in range(8):
+        monitor.record_many(np.full(8, 5.0))     # violating
+        rt.maybe_decide()
+    assert all(t.variant == t.n_variants - 1 for t in tenants)
+    assert [t.reclaimed for t in tenants] == [1, 2]
+    for _ in range(16):
+        monitor.record_many(np.full(8, 0.05))    # deep slack
+        rt.maybe_decide()
+    assert all(t.variant == 0 and t.reclaimed == 0 for t in tenants)
+    victims = {h["victim"] for h in rt.history if h["victim"] is not None}
+    assert victims == {0, 1}
+
+
+def test_runtime_single_tenant_backcompat():
+    """The legacy ``PliantRuntime(table, monitor)`` ctor still works: the
+    table is wrapped in a zero-budget TrainTenant (no reshard actuator ->
+    no phantom reclaim intervals) under a 1-tenant arbiter that IS the
+    Fig. 3 policy."""
+    from repro.approx.knobs import PRECISE, ApproxKnobs
+    from repro.core.monitor import LatencyMonitor
+    from repro.core.runtime import PliantRuntime
+    from repro.core.variants import Variant, VariantTable
+    table = VariantTable([
+        Variant(PRECISE, 1.0, 0.0),
+        Variant(ApproxKnobs(matmul_precision="int8"), 0.7, 0.003)])
+    monitor = LatencyMonitor(qos_target_s=1.0, min_samples=4)
+    rt = PliantRuntime(table, monitor,
+                       ControllerConfig(decision_interval_s=0.0))
+    assert rt.auto_tenant and rt.cfg.max_reclaim == 0
+    monitor.record_many(np.full(8, 5.0))
+    act = rt.maybe_decide()
+    assert act == Action.SET_MOST_APPROX and rt.active_variant == 1
+    # violating at most-approximate with no actuator: hold, never reclaim
+    monitor.record_many(np.full(8, 5.0))
+    assert rt.maybe_decide() == Action.HOLD and rt.reclaimed == 0
+    # late-bound reclaimer restores the budget (serve engine construction
+    # order) and the absolute count reaches the actuator
+    seen = []
+    rt.attach_reclaimer(seen.append, max_reclaim=2)
+    assert rt.cfg.max_reclaim == 2
+    monitor.record_many(np.full(8, 5.0))
+    assert rt.maybe_decide() == Action.RECLAIM_CHIPS
+    assert seen == [1] and rt.reclaimed == 1
+
+
+# ------------------------------------------------------- property tests --
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.floats(-1, 1, allow_nan=False)),
+                min_size=1, max_size=80),
+       st.integers(2, 4), st.integers(2, 5),
+       st.lists(st.integers(0, 6), min_size=4, max_size=4),
+       st.sampled_from(ARBS))
+def test_arbiter_invariants(ticks, n_apps, n_variants, budgets, kind):
+    """State always in bounds; per-tenant reclaim never exceeds THAT
+    tenant's budget; at most one knob moves by one step (except the
+    jump); violations never decrease any tenant's approximation."""
+    tenants = mk_tenants(n_apps, n_variants, budgets[:n_apps])
+    arb = mk_arbiter(kind, tenants)
+    for violated, slack in ticks:
+        before = [(s.variant, s.reclaimed) for s in arb.states]
+        arb.tick(violated, slack)
+        moved = 0
+        for i, s in enumerate(arb.states):
+            assert 0 <= s.variant < n_variants
+            assert 0 <= s.reclaimed <= tenants[i].max_reclaim
+            assert s.variant == tenants[i].variant
+            assert s.reclaimed == tenants[i].reclaimed
+            dv = abs(s.variant - before[i][0])
+            dr = abs(s.reclaimed - before[i][1])
+            assert dr <= 1 and (dv == 0 or dr == 0)
+            moved += (dv > 0) + (dr > 0)
+            if violated:
+                assert s.variant >= before[i][0]
+                assert s.reclaimed >= before[i][1]
+        assert moved <= 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.floats(-1, 1, allow_nan=False)),
+                min_size=0, max_size=40),
+       st.integers(2, 4),
+       st.lists(st.integers(0, 5), min_size=4, max_size=4),
+       st.sampled_from(ARBS))
+def test_arbiter_deapproximates_under_sustained_slack(prefix, n_apps,
+                                                      budgets, kind):
+    """From ANY reachable state, sustained slack returns every tenant to
+    precise with all quanta given back — de-approximation cannot wedge."""
+    tenants = mk_tenants(n_apps, 4, budgets[:n_apps])
+    arb = mk_arbiter(kind, tenants)
+    for violated, slack in prefix:
+        arb.tick(violated, slack)
+    worst = sum(s.variant + s.reclaimed for s in arb.states)
+    for _ in range(worst + 1):
+        arb.tick(False, 0.5)
+    assert all(s.variant == 0 and s.reclaimed == 0 for s in arb.states)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 5),
+       st.lists(st.integers(0, 5), min_size=4, max_size=4),
+       st.sampled_from(ARBS))
+def test_arbiter_liveness_under_sustained_violation(n_apps, n_variants,
+                                                    budgets, kind):
+    """Sustained violation drains every available move (no starvation, no
+    premature HOLD) in exactly jumps + sum(budgets) intervals."""
+    tenants = mk_tenants(n_apps, n_variants, budgets[:n_apps])
+    arb = mk_arbiter(kind, tenants)
+    moves = n_apps + sum(t.max_reclaim for t in tenants)
+    held = 0
+    for _ in range(moves):
+        act, _ = arb.tick(True, -0.5)
+        held += act == Action.HOLD
+    assert held == 0
+    assert all(s.variant == s.most_approx for s in arb.states)
+    assert all(t.reclaimed == t.max_reclaim for t in tenants)
