@@ -12,9 +12,11 @@ LIVE pages instead of slots x max_len.
 Dead traffic is skipped at two levels:
 
 * **index map** — unmapped block entries already point at the reserved null
-  page 0; with ``window`` > 0 the map also redirects pages wholly below the
-  local-attention band to page 0. Consecutive grid steps that map the same
-  page elide the re-fetch, so skipped pages cost (at most) one null-page DMA.
+  page 0; the map also redirects pages wholly past the query position
+  (speculatively-reserved decode pages from grouped admission) and, with
+  ``window`` > 0, pages wholly below the local-attention band. Consecutive
+  grid steps that map the same page elide the re-fetch, so skipped pages
+  cost (at most) one null-page DMA.
 * **``@pl.when`` body guard** — null/out-of-band/future pages skip the MXU
   work entirely; partial pages are masked per-entry by the page's ``ppos``
   row (position -1 = empty, plus causal/window masking), exactly mirroring
@@ -117,12 +119,16 @@ def paged_attention(q, kp, vp, ppos, block, position, *, window: int = 0,
 
     def _page_map(b, g, m, block_ref, pos_ref):
         pid = block_ref[b, m]
+        # redirect dead pages to the null page: the fetch aliases page 0
+        # (elided when consecutive) instead of streaming a page the body
+        # guard would ignore anyway. Dead = wholly past the query position
+        # (grouped admission speculatively maps a request's projected decode
+        # pages up front — still empty, never attended) or, with a window,
+        # wholly below the local-attention band.
+        dead = m * P > pos_ref[b]
         if window:
-            # redirect wholly-out-of-band pages to the null page: the fetch
-            # aliases page 0 (elided when consecutive) instead of streaming
-            # a page the body guard would ignore anyway
-            dead = (m + 1) * P - 1 <= pos_ref[b] - window
-            pid = jnp.where(dead, 0, pid)
+            dead |= (m + 1) * P - 1 <= pos_ref[b] - window
+        pid = jnp.where(dead, 0, pid)
         return (pid, 0, 0, 0)
 
     def _kv_map(b, g, m, block_ref, pos_ref):

@@ -87,6 +87,12 @@ def main(argv=None):
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="first N prompt tokens identical across requests "
                         "(exercises the prefix cache under --paged)")
+    p.add_argument("--max-admission-chunks", type=int, default=4,
+                   help="prefill-chunk burst per step when no decoder is "
+                        "inside its QoS guard band (continuous batching)")
+    p.add_argument("--qos-guard", type=float, default=0.25,
+                   help="guard band: burst admission chunks only while "
+                        "monitor p99 <= (1 - guard) * QoS target")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -120,7 +126,9 @@ def main(argv=None):
                       temperature=args.temperature, mesh=mesh,
                       prefill_chunk=args.prefill_chunk, seed=args.seed,
                       paged=args.paged, page_size=args.page_size,
-                      n_pages=args.pool_pages)
+                      n_pages=args.pool_pages,
+                      max_admission_chunks=args.max_admission_chunks,
+                      qos_guard=args.qos_guard)
     if args.variant is not None:
         eng.set_variant(names.index(args.variant))
 
@@ -185,12 +193,18 @@ def main(argv=None):
     if args.paged:
         s = eng.pool.stats
         looks = s["prefix_hits"] + s["prefix_misses"]
+        chunks = [c for c, _ in eng.step_admission_chunks]
         print(f"paged: pages={eng.pool.spec.n_pages} "
               f"occupancy={eng.pool.occupancy():.2f} "
               f"peak_used={s['peak_used']} "
               f"prefix_hit_rate={s['prefix_hits'] / max(looks, 1):.2f} "
               f"tokens_skipped={s['tokens_skipped']} "
               f"reclaim_events={s['reclaim_events']}")
+        print(f"admission: grouped_pages={s['grouped_pages']} "
+              f"grouped_fallbacks={s['grouped_fallbacks']} "
+              f"replenish_evictions={s['replenish_evictions']} "
+              f"chunks/step max={max(chunks, default=0)} "
+              f"budget_cap={args.max_admission_chunks}")
     if args.qos_target > 0:
         acts = [h["action"] for h in runtime.history if h["action"] != "hold"]
         print(f"qos: target={1e3 * args.qos_target:.1f}ms "

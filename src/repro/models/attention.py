@@ -307,7 +307,8 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
                            cfg: ModelConfig, *, window: int = 0,
                            kv_scale: float = 0.0, active=None,
                            use_kernel: Optional[bool] = None,
-                           interpret: bool = False):
+                           interpret: bool = False,
+                           dyn_scatter: bool = False):
     """One-token decode against the paged pool. x: (B,1,D); position: (B,).
 
     The new K/V entry scatters into the slot's private tail page (host-side
@@ -327,6 +328,13 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
     Defaults to the kernel on TPU; the ``_gather_pages`` + ``_sdpa`` path
     below is the interpret/reference fallback (and the GSPMD path for
     sharded pools).
+
+    ``dyn_scatter`` replaces the one-hot masked write (O(n_pages * P) work
+    per entry) with a dynamic-index ``.at[page, offset].set`` — O(1) per
+    entry. Safe ONLY for unsharded pools: under GSPMD a dynamic scatter on
+    a partitioned page dim lowers to all-gather traffic, which is exactly
+    what the one-hot form avoids. Inactive rows are redirected to the null
+    page instead of suppressed, an equivalent no-op (page 0 is never read).
     """
     from repro.kernels import ops as kops
     from repro.kernels.paged_attention import paged_attention
@@ -347,14 +355,22 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
     n_pages, P = cache.ppos.shape
     phys = jnp.take_along_axis(cache.block, (position // P)[:, None],
                                axis=1)[:, 0]              # (B,)
-    sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
-           & (jnp.arange(P)[None, None, :] == (position % P)[:, None, None]))
-    if active is not None:
-        sel &= active[:, None, None]
-    write = sel.any(axis=0)
-    nkp = _page_scatter(sel, write, cache.kp, k_store[:, 0])
-    nvp = _page_scatter(sel, write, cache.vp, v_store[:, 0])
-    nppos = _page_scatter(sel, write, cache.ppos, position)
+    if dyn_scatter:
+        tgt = phys if active is None else jnp.where(active, phys, 0)
+        off = position % P
+        nkp = cache.kp.at[tgt, off].set(k_store[:, 0])
+        nvp = cache.vp.at[tgt, off].set(v_store[:, 0])
+        nppos = cache.ppos.at[tgt, off].set(position)
+    else:
+        sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
+               & (jnp.arange(P)[None, None, :]
+                  == (position % P)[:, None, None]))
+        if active is not None:
+            sel &= active[:, None, None]
+        write = sel.any(axis=0)
+        nkp = _page_scatter(sel, write, cache.kp, k_store[:, 0])
+        nvp = _page_scatter(sel, write, cache.vp, v_store[:, 0])
+        nppos = _page_scatter(sel, write, cache.ppos, position)
     new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
 
     if use_kernel is None:
@@ -378,7 +394,7 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
 
 def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
                           cfg: ModelConfig, slot, *, window: int = 0,
-                          kv_scale: float = 0.0):
+                          kv_scale: float = 0.0, dyn_scatter: bool = False):
     """C-token prompt-chunk step for ONE slot of the paged pool (chunked
     admission). x: (1,C,D); positions: (1,C); ``slot`` is a traced scalar —
     one executable per chunk length serves every slot and every chunk.
@@ -410,12 +426,22 @@ def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
     brow = jnp.take(cache.block, slot, axis=0)            # (M,)
     pos_c = positions[0]                                  # (C,)
     phys = jnp.take(brow, pos_c // P)                     # (C,)
-    sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
-           & (jnp.arange(P)[None, None, :] == (pos_c % P)[:, None, None]))
-    write = sel.any(axis=0)
-    nkp = _page_scatter(sel, write, cache.kp, k_store[0])
-    nvp = _page_scatter(sel, write, cache.vp, v_store[0])
-    nppos = _page_scatter(sel, write, cache.ppos, pos_c)
+    if dyn_scatter:
+        # dynamic-index write (unsharded pools only — see
+        # paged_decode_attention): chunk positions are distinct, so the
+        # per-token targets never collide
+        off = pos_c % P
+        nkp = cache.kp.at[phys, off].set(k_store[0])
+        nvp = cache.vp.at[phys, off].set(v_store[0])
+        nppos = cache.ppos.at[phys, off].set(pos_c)
+    else:
+        sel = ((jnp.arange(n_pages)[None, :, None] == phys[:, None, None])
+               & (jnp.arange(P)[None, None, :]
+                  == (pos_c % P)[:, None, None]))
+        write = sel.any(axis=0)
+        nkp = _page_scatter(sel, write, cache.kp, k_store[0])
+        nvp = _page_scatter(sel, write, cache.vp, v_store[0])
+        nppos = _page_scatter(sel, write, cache.ppos, pos_c)
     new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
 
     kk, vv, _, valid = _gather_pages(new_cache, brow[None], positions,

@@ -100,7 +100,8 @@ def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
 
 def block_prefill_paged(kind: str, params, h, positions, cache,
                         cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
-                        slot, ep_axis: Optional[str] = None, mesh=None):
+                        slot, ep_axis: Optional[str] = None, mesh=None,
+                        dyn_scatter: bool = False):
     """Paged sibling of ``block_prefill``: one slot's prompt chunk against
     the shared page pool / per-slot Mamba rows. h: (1,C,D); ``slot`` traced.
     """
@@ -124,7 +125,8 @@ def block_prefill_paged(kind: str, params, h, positions, cache,
     kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
     y, new_cache = attn_mod.paged_chunk_attention(
         params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
-        positions, cache, cfg, slot, window=window, kv_scale=kv_scale)
+        positions, cache, cfg, slot, window=window, kv_scale=kv_scale,
+        dyn_scatter=dyn_scatter)
     h = h + y
     hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
     if "moe" in params:
@@ -141,13 +143,15 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
                  knobs: ApproxKnobs = PRECISE, *,
                  ep_axis: Optional[str] = None, mesh=None,
                  enc_out: Optional[jax.Array] = None, active=None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 dyn_scatter: bool = False):
     """Single-token decode. Returns (h, new_cache, aux).
 
     ``active`` (B,) bool masks per-slot cache writes (paged engines whose
     decode interleaves with background admission); None = all rows live.
     ``use_kernel`` forwards the paged-attention dispatch override (sharded
-    engines force the GSPMD-safe gather path)."""
+    engines force the GSPMD-safe gather path); ``dyn_scatter`` selects the
+    dynamic-index cache write for unsharded paged pools."""
     aux = jnp.zeros((), jnp.float32)
     prec = knobs.matmul_precision
     if kind == MAMBA:
@@ -161,7 +165,8 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
     if isinstance(cache, attn_mod.PagedKVCache):
         y, new_cache = attn_mod.paged_decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,
-            kv_scale=kv_scale, active=active, use_kernel=use_kernel)
+            kv_scale=kv_scale, active=active, use_kernel=use_kernel,
+            dyn_scatter=dyn_scatter)
     else:
         y, new_cache = attn_mod.decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,

@@ -261,12 +261,16 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                 knobs: ApproxKnobs = PRECISE, *,
                 ep_axis: Optional[str] = None, mesh=None,
                 enc_out: Optional[jax.Array] = None, active=None,
-                use_kernel: Optional[bool] = None):
+                use_kernel: Optional[bool] = None,
+                dyn_scatter: bool = False):
     """tokens: (B,1) int32; position: (B,) absolute positions.
 
     Returns (logits (B,V) fp32, new_caches). ``active`` (B,) bool masks
-    per-slot cache writes and ``use_kernel`` overrides the paged-attention
-    kernel dispatch (see ``blocks.block_decode``).
+    per-slot cache writes; ``use_kernel`` overrides the paged-attention
+    kernel dispatch and ``dyn_scatter`` the paged cache-write form (see
+    ``blocks.block_decode``). All hybrid layer kinds (attention pages AND
+    Mamba state rows) advance inside the ONE ``lax.scan`` body below, so a
+    mixed block stack is a single lowered executable per decode step.
     """
     h = params["embed"][tokens[:, 0]][:, None, :]
     shared = params.get("shared")
@@ -279,7 +283,8 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
             h, nc, _ = block_decode(kind, p, h, position, group_caches[j],
                                     cfg, knobs, ep_axis=ep_axis, mesh=mesh,
                                     enc_out=enc_out, active=active,
-                                    use_kernel=use_kernel)
+                                    use_kernel=use_kernel,
+                                    dyn_scatter=dyn_scatter)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

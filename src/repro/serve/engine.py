@@ -22,22 +22,36 @@ Two cache data models, selected by ``paged``:
   RECLAIM/RETURN shrink/regrow ``pool_pages``, evicting prefix-cache pages
   first and never touching live requests.
 
-The paged loop is **stall-free**: admission prefill no longer runs to
-completion inside ``step()``. Each step advances AT MOST ONE bounded chunk
-of the head-of-queue admission, then decodes every active slot — a long
-prompt adds at most one chunk of work between any two decode steps, so
-concurrent decoders' inter-token gap is bounded by the chunk budget instead
-of the whole prompt. The decode executable takes a per-slot ``active`` mask
-so the admitting slot's dead batch row cannot scatter garbage into its
-(already mapped) pages or SSM rows. Admission is also **page-aware packed**:
-when the head of the queue does not fit the pool budget, the first of the
-leading ``pack_window`` pending requests that does fit is admitted instead
-— and after ``max_head_skips`` consecutive head skips admission reverts to
-strict FIFO, so head-of-line blocking AND starvation are both bounded.
-Banded-attention archs (every attention layer LOCAL) additionally free
-pages that fall out of the window as decode advances, keeping pool
-occupancy flat for long generations. The dense path keeps the legacy
-synchronous admission (its slot-insert is exact-output-critical).
+The paged loop is **continuously batched** and **stall-free**: admission
+prefill never runs to completion inside ``step()``. EVERY free slot opens
+its own in-flight admission each step (no wave barrier — freed slots refill
+while their neighbours keep decoding), and the step advances the in-flight
+admissions round-robin under a QoS-aware chunk budget: ONE bounded chunk
+per step while any decoder is live (unless the attached runtime's
+``LatencyMonitor`` reports p99 comfortably inside the QoS target — the
+``qos_guard`` band), bursting up to ``max_admission_chunks`` when there is
+no decoder to protect or headroom to spare. A long prompt therefore adds at
+most one budget's worth of work between any two decode steps. The decode
+executable takes a per-slot ``active`` mask so admitting slots' dead batch
+rows cannot scatter garbage into their (already mapped) pages or SSM rows.
+Admission is also **page-aware packed**: when the head of the queue does
+not fit the pool budget, the first of the leading ``pack_window`` pending
+requests that does fit is admitted instead — and after ``max_head_skips``
+consecutive head skips admission reverts to strict FIFO, so head-of-line
+blocking AND starvation are both bounded. Admission allocates grouped:
+prompt pages AND the request's projected decode pages map in one free-list
+transaction (``serve.pages``), so the decode hot loop almost never touches
+the allocator; a per-step ``PagePool.replenish`` keeps free-list headroom
+above a watermark by evicting prefix entries off the admission path.
+Banded-attention archs (every attention layer LOCAL) skip the speculative
+reservation — they free pages that fall out of the window as decode
+advances, keeping pool occupancy flat for long generations. On device,
+hybrid decode is ONE fused executable per step (attention pages and SSM
+rows advance inside a single lowered scan — ``models.lm.decode_step``);
+single-device engines use dynamic-index cache writes and, when greedy,
+fuse argmax into the step so only (B,) token ids cross the host boundary.
+The dense path keeps the legacy synchronous admission (its slot-insert is
+exact-output-critical).
 
 Serving variants come from a ``VariantTable`` (the explorer's serving grid):
 every variant's decode executable is registered up front and the active one
@@ -94,8 +108,9 @@ class Request:
 
 @dataclass
 class _Admission:
-    """One in-flight background admission (paged stall-free loop): the
-    prompt's prefill progress, advanced one bounded chunk per engine step."""
+    """One in-flight background admission (continuous-batching loop): the
+    prompt's prefill progress, advanced chunk-by-chunk under the per-step
+    QoS budget. Several may be in flight at once — one per free slot."""
     req: Request
     slot: int
     next: int                    # next prompt index to prefill
@@ -104,6 +119,8 @@ class _Admission:
     tail_register: List[int]     # boundaries registered after completion
     logits: object = None
     compute_s: float = 0.0
+    started: bool = False        # first chunk issued (queue-wait ends THEN,
+                                 # not when the admission is opened)
 
 
 @dataclass
@@ -132,6 +149,11 @@ class ServeEngine:
                                        # head-of-queue skips, admit strict
                                        # FIFO so a large request cannot be
                                        # starved by a stream of small ones
+    max_admission_chunks: int = 4      # prefill-chunk burst per step when no
+                                       # decoder needs protecting (or QoS
+                                       # headroom says bursting is safe)
+    qos_guard: float = 0.25            # guard band: burst only while monitor
+                                       # p99 <= (1 - guard) * QoS target
 
     def __post_init__(self):
         if self.runtime is not None:
@@ -172,10 +194,15 @@ class ServeEngine:
         # can interleave with background admission (stall-free loop); under
         # a mesh they force the gather path — the scalar-prefetch Pallas
         # kernel does not partition under GSPMD
+        # greedy paged engines fuse argmax into the decode executable: the
+        # step returns (B,) token ids, so the host never pulls (B, V) logits
+        self._fused_sample = bool(self.paged and self.temperature <= 0.0)
         if self.paged:
             mk = functools.partial(
                 step_mod.make_paged_serve_step,
-                use_kernel=False if self.mesh is not None else None)
+                use_kernel=False if self.mesh is not None else None,
+                dynamic_scatter=self.mesh is None,
+                sample_greedy=self._fused_sample)
         else:
             mk = step_mod.make_serve_step
         self._decodes = {
@@ -192,7 +219,9 @@ class ServeEngine:
         self.positions = np.zeros(self.batch_slots, np.int32)
         self.slots: List[Optional[Request]] = [None] * self.batch_slots
         self.pending: Deque[Request] = collections.deque()
-        self._admission: Optional[_Admission] = None
+        # in-flight background admissions, keyed by slot (insertion order =
+        # admission order): continuous batching keeps one per free slot
+        self._admissions: Dict[int, _Admission] = {}
         self._head_skips = 0           # consecutive pool-blocked head-of-queue
         # window-exit page freeing is sound only when EVERY attention layer
         # is banded (a single global/shared layer still reaches every page)
@@ -203,8 +232,12 @@ class ServeEngine:
         self.step_latencies: List[float] = []
         self.admit_latencies: List[float] = []
         self.swaps: List[Tuple[int, int]] = []   # (step index, variant index)
+        self.step_admission_chunks: List[Tuple[int, int]] = []  # (used, budget)
         self._token_lat: List[float] = []        # unflushed monitor samples
-        self._rng = np.random.default_rng(self.seed)
+        # per-request PRNG streams keyed (engine seed, uid): sampling is
+        # invariant to slot assignment and admission interleaving, so
+        # continuous batching reproduces the wave-scheduled token streams
+        self._rngs: Dict[int, np.random.Generator] = {}
         self._pending_variant: Optional[int] = None
         self._tenant = None
         self._bound = False
@@ -259,7 +292,7 @@ class ServeEngine:
         self._apply_pending_variant()
 
     def _apply_pending_variant(self) -> None:
-        if self._pending_variant is None or self._admission is not None:
+        if self._pending_variant is None or self._admissions:
             return
         idx, self._pending_variant = self._pending_variant, None
         if idx != self._active:
@@ -319,8 +352,9 @@ class ServeEngine:
             self._prefills.move_to_end(key)
             return fn
         if self.paged:
-            step = step_mod.make_paged_admission_step(self.cfg,
-                                                      self.active_knobs)
+            step = step_mod.make_paged_admission_step(
+                self.cfg, self.active_knobs,
+                dynamic_scatter=self.mesh is None)
             if self.mesh is None:
                 fn = jax.jit(step)
             else:
@@ -363,14 +397,31 @@ class ServeEngine:
                 caches = jax.device_put(caches, self._cache_sh)
         return caches
 
-    def _sample(self, logits_row: np.ndarray) -> int:
+    def _rng_for(self, req: Request) -> np.random.Generator:
+        g = self._rngs.get(req.uid)
+        if g is None:
+            g = np.random.default_rng((self.seed, req.uid))
+            self._rngs[req.uid] = g
+        return g
+
+    def _sample_rows(self, logits: np.ndarray,
+                     reqs: List[Request]) -> np.ndarray:
+        """ONE batched sampling call for every emitting row (the per-row
+        numpy loop cost O(slots) softmax passes per step). logits: (R, V);
+        ``reqs`` the emitting requests, row-aligned. Greedy is a single
+        argmax; temperature sampling draws one uniform per request from its
+        PRIVATE stream and inverts the softmax CDF — exactly the tokens a
+        per-row loop over the same streams would produce, regardless of
+        which rows happen to share the batch."""
         if self.temperature <= 0.0:
-            return int(np.argmax(logits_row))
-        z = logits_row.astype(np.float64) / self.temperature
-        z -= z.max()
+            return np.argmax(logits, axis=-1)
+        z = logits.astype(np.float64) / self.temperature
+        z -= z.max(axis=-1, keepdims=True)
         p = np.exp(z)
-        p /= p.sum()
-        return int(self._rng.choice(p.size, p=p))
+        cdf = np.cumsum(p, axis=-1)
+        u = np.asarray([self._rng_for(r).random() for r in reqs])
+        idx = (cdf < u[:, None] * cdf[:, -1:]).sum(axis=-1)
+        return np.minimum(idx, logits.shape[-1] - 1)
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
@@ -457,70 +508,163 @@ class ServeEngine:
                 start += C
         return logits, caches
 
-    def _start_admission(self) -> None:
-        """Open the next background admission (paged): pick a free slot and
-        the first of the leading ``pack_window`` pending requests whose
-        pages fit the pool budget (page-aware packing — a pool-blocked head
-        of queue must not stall admissions that fit). The window bounds the
-        per-step host work while the pool is blocked, and after
-        ``max_head_skips`` consecutive head skips admission falls back to
-        strict FIFO so a large request cannot be starved by a stream of
-        small ones. Maps the block table (prefix hits bump refcounts and
-        skip those chunks) and seeds the slot's SSM rows; prefill itself is
-        advanced chunk-by-chunk by ``_advance_admission``."""
-        if self._admission is not None or not self.pending:
-            return
-        slot = next((i for i in range(self.batch_slots)
-                     if self.slots[i] is None), None)
-        if slot is None:
-            return
-        strict = self._head_skips >= self.max_head_skips
-        window = 1 if strict else min(len(self.pending), self.pack_window)
-        for qi in range(window):
-            req = self.pending[qi]
-            assert len(req.prompt) <= self.max_len, \
-                (len(req.prompt), self.max_len)
-            assert len(req.prompt) + req.max_new <= \
-                self._page_spec.max_pages * self.page_size, \
-                "paged serving does not ring-wrap: need " \
-                "max_len >= prompt + max_new"
-            plan = self.pool.admit(slot, req.prompt, self.active_knobs)
-            if plan is None:
-                if qi == 0:
-                    self._head_skips += 1
-                continue                     # over budget: try the next one
-            if qi == 0:
-                self._head_skips = 0
-            del self.pending[qi]
-            self._push_blocks()
-            snap = plan.entry.mamba if (plan.shared_tokens and plan.entry) \
-                else None
-            self._set_mamba_rows(slot, snap)
-            has_mamba = any(isinstance(c, MambaCache) for c in self.caches)
-            S = len(req.prompt)
-            if has_mamba:
-                # prefill pauses at each boundary so its SSM snapshot matches
-                stops = sorted(set(plan.register) | {S})
-                mamba_reg, tail_reg = list(plan.register), []
-            else:
-                # attention-only: pages are position-addressed, registration
-                # is pure bookkeeping — no need to fragment the chunk stream
-                stops = [S]
-                mamba_reg, tail_reg = [], list(plan.register)
-            req.t_admit_start = time.perf_counter()
-            self._admission = _Admission(req, slot, plan.shared_tokens,
-                                         stops, mamba_reg, tail_reg)
-            return
+    def _prefix_dedup_wait(self, req: Request) -> bool:
+        """Cold-start prefix dedup: True when an in-flight admission is
+        prefilling a page-aligned prefix this prompt shares and the index
+        does not cover it yet. Admitting now would concurrently re-prefill
+        (and re-allocate) pages the sibling is about to register — hold the
+        request back until the registration lands. Steady state (prefix
+        already indexed) never defers, so warm traces keep full admission
+        concurrency."""
+        P = self.page_size
+        cap = min((len(req.prompt) - 1) // P, self.pool.max_register_pages)
+        if cap <= 0 or not self._admissions:
+            return False
+        best = 0
+        for adm in self._admissions.values():
+            other = adm.req.prompt
+            lim = min(len(req.prompt), len(other), cap * P)
+            k = 0
+            while k < lim and req.prompt[k] == other[k]:
+                k += 1
+            best = max(best, (k // P) * P)
+        if not best:
+            return False
+        return self.pool.lookup_prefix(req.prompt,
+                                       self.active_knobs)[0] < best
 
-    def _advance_admission(self) -> None:
-        """Run AT MOST ONE bounded prefill chunk of the in-flight admission
-        (the stall-free loop's per-step admission budget); on the final
-        chunk, sample the first token and activate the slot."""
-        if self._admission is None:
-            self._start_admission()
-            if self._admission is None:
-                return
-        adm, req = self._admission, self._admission.req
+    def _start_admissions(self, count_skips: bool = True) -> None:
+        """Open a background admission on EVERY free slot (continuous
+        batching — no wave barrier: a slot freed this step refills this
+        step). Per slot, pick the first of the leading ``pack_window``
+        pending requests whose pages fit the pool budget (page-aware
+        packing — a pool-blocked head of queue must not stall admissions
+        that fit) and whose shared prefix is not mid-prefill in a sibling
+        admission (``_prefix_dedup_wait``). The window bounds the per-step host work while the pool
+        is blocked, and after ``max_head_skips`` consecutive head skips
+        admission falls back to strict FIFO so a large request cannot be
+        starved by a stream of small ones. Maps the block table grouped —
+        prompt pages plus projected decode pages in one transaction; prefix
+        hits bump refcounts and skip those chunks — and seeds the slot's
+        SSM rows; prefill itself is advanced by ``_advance_admissions``.
+        Does NOT stamp ``t_admit_start``: queue-wait ends when the first
+        chunk RUNS (``_advance_one``), not when the admission is opened."""
+        started_any = False
+        while self.pending:
+            slot = next((i for i in range(self.batch_slots)
+                         if self.slots[i] is None
+                         and i not in self._admissions), None)
+            if slot is None:
+                break
+            strict = self._head_skips >= self.max_head_skips
+            window = 1 if strict else min(len(self.pending), self.pack_window)
+            started = False
+            for qi in range(window):
+                req = self.pending[qi]
+                assert len(req.prompt) <= self.max_len, \
+                    (len(req.prompt), self.max_len)
+                assert len(req.prompt) + req.max_new <= \
+                    self._page_spec.max_pages * self.page_size, \
+                    "paged serving does not ring-wrap: need " \
+                    "max_len >= prompt + max_new"
+                if self._prefix_dedup_wait(req):
+                    continue       # sibling is mid-prefill of our prefix
+                # grouped/speculative allocation: reserve the decode pages
+                # up front (positions S .. S+max_new-2 are written) so the
+                # hot loop's ensure_decode_page never allocates. Banded
+                # archs skip the reservation — they free window-dead pages
+                # to hold occupancy flat, and pre-mapping the whole decode
+                # horizon would defeat that
+                reserve = 0 if self._window_free else max(req.max_new - 1, 0)
+                plan = self.pool.admit(slot, req.prompt, self.active_knobs,
+                                       reserve_tokens=reserve)
+                if plan is None:
+                    if qi == 0 and count_skips:
+                        self._head_skips += 1
+                    continue                 # over budget: try the next one
+                if qi == 0:
+                    self._head_skips = 0
+                del self.pending[qi]
+                snap = plan.entry.mamba if (plan.shared_tokens and plan.entry)\
+                    else None
+                self._set_mamba_rows(slot, snap)
+                has_mamba = any(isinstance(c, MambaCache)
+                                for c in self.caches)
+                S = len(req.prompt)
+                if has_mamba:
+                    # prefill pauses at each boundary so its SSM snapshot
+                    # matches
+                    stops = sorted(set(plan.register) | {S})
+                    mamba_reg, tail_reg = list(plan.register), []
+                else:
+                    # attention-only: pages are position-addressed,
+                    # registration is pure bookkeeping — no need to fragment
+                    # the chunk stream
+                    stops = [S]
+                    mamba_reg, tail_reg = [], list(plan.register)
+                self._admissions[slot] = _Admission(
+                    req, slot, plan.shared_tokens, stops, mamba_reg, tail_reg)
+                started = started_any = True
+                break
+            if not started:
+                break       # nothing in the window fits — later slots share
+                            # the same pool, so stop scanning this step
+        if started_any:
+            # ONE block-table push covers every admission opened this call
+            self._push_blocks()
+
+    def _chunk_budget(self) -> int:
+        """Prefill chunks this step may spend across all in-flight
+        admissions — the QoS-aware knob that trades time-to-first-token
+        against inter-token latency. No live decoder: burst (nobody's
+        inter-token gap to protect). Otherwise one chunk, unless the
+        runtime's monitor has a tail estimate comfortably inside the QoS
+        target (p99 at most (1 - qos_guard) x target): with that much
+        headroom, admissions may burst without endangering the guarantee.
+        An abstaining monitor (below min_samples) or no runtime at all
+        means no evidence — stay conservative."""
+        cap = max(1, self.max_admission_chunks)
+        if not any(s is not None for s in self.slots):
+            return cap
+        if self.runtime is not None:
+            mon = self.runtime.monitor
+            p99 = mon.p99()
+            if p99 is not None and mon.qos_target_s > 0 \
+                    and p99 <= (1.0 - self.qos_guard) * mon.qos_target_s:
+                return cap
+        return 1
+
+    def _advance_admissions(self) -> None:
+        """Continuous-batching admission phase of ``step()``: open
+        admissions on free slots, then advance the in-flight set round-robin
+        one chunk at a time until the step's QoS chunk budget is spent (or
+        nothing is left to advance). Completions free their slot mid-phase,
+        so the re-scan between passes can immediately refill it — several
+        short prompts can admit back-to-back within one step's budget."""
+        budget = self._chunk_budget()
+        used = 0
+        self._start_admissions()
+        while used < budget:
+            ran = False
+            for slot in list(self._admissions):
+                if used >= budget:
+                    break
+                self._advance_one(self._admissions[slot])
+                used += 1
+                ran = True
+            if not ran:
+                break
+            self._start_admissions(count_skips=False)
+        if used or self._admissions:
+            self.step_admission_chunks.append((used, budget))
+
+    def _advance_one(self, adm: _Admission) -> None:
+        """Run ONE bounded prefill chunk of ``adm``; on the final chunk,
+        sample the first token and activate the slot."""
+        req = adm.req
+        if not adm.started:
+            adm.started = True
+            req.t_admit_start = time.perf_counter()   # queue-wait ends HERE
         S = len(req.prompt)
         end = next(b for b in adm.stops if b > adm.next)
         C = min(self.prefill_chunk, end - adm.next)
@@ -553,9 +697,9 @@ class ServeEngine:
         # lookup caps sharing at len(prompt)-1 tokens, so at least one chunk
         # always ran and produced the sampling logits
         assert adm.logits is not None
-        tok = self._sample(np.asarray(adm.logits)[0])
+        tok = int(self._sample_rows(np.asarray(adm.logits), [req])[0])
         now = time.perf_counter()
-        self._admission = None
+        del self._admissions[adm.slot]
         self.admit_latencies.append(adm.compute_s)
         self._token_lat.append(now - req.t_admit_start)  # TTFT sample (wall)
         req.t_admit = now                  # admission COMPLETION
@@ -564,6 +708,7 @@ class ServeEngine:
         req.token_times.append(now)
         if len(req.out) >= req.max_new:
             req.done = True                # 1-token request: no slot
+            self._rngs.pop(req.uid, None)
             if self._free_slot(adm.slot):
                 self._push_blocks()
             return
@@ -588,7 +733,7 @@ class ServeEngine:
                         self.caches = jax.device_put(self.caches,
                                                      self._cache_sh)
                 self.pending.popleft()
-                tok = self._sample(np.asarray(logits)[0])
+                tok = int(self._sample_rows(np.asarray(logits), [req])[0])
                 now = time.perf_counter()
                 self.admit_latencies.append(now - t0)
                 self._token_lat.append(now - t0)   # TTFT sample
@@ -606,22 +751,27 @@ class ServeEngine:
     # --------------------------------------------------------------- steps --
 
     def step(self) -> None:
-        """One engine step. Paged: advance the background admission by AT
-        MOST one bounded prefill chunk, then decode one token for every
-        active slot (the admitting slot rides along inactive, its writes
-        masked) — a long prompt never stalls the decoders for more than one
-        chunk. Dense: legacy synchronous admission, then decode. Both tick
-        the Pliant control loop at the step boundary."""
+        """One engine step. Paged: run the continuous-batching admission
+        phase (open admissions on every free slot, advance them under the
+        QoS chunk budget), then decode one token for every active slot
+        (admitting slots ride along inactive, their writes masked) — a long
+        prompt never stalls the decoders for more than the chunk budget.
+        Dense: legacy synchronous admission, then decode. Both tick the
+        Pliant control loop at the step boundary."""
         if self.paged:
-            self._advance_admission()
+            self._advance_admissions()
         else:
             self._admit()
         if all(s is None for s in self.slots):
+            if self.paged:
+                self.pool.replenish()  # keep headroom between steps
             self._control_tick()       # flush TTFT samples of 1-token admits
             return
         if self.paged:
             # map each live slot's write page before the step scatters to it
-            # (live growth bypasses the reclaim limit — see serve.pages)
+            # (live growth bypasses the reclaim limit — see serve.pages).
+            # Grouped admission already reserved these pages, so this is a
+            # no-op except for banded archs (which skip the reservation)
             dirty = False
             for i, req in enumerate(self.slots):
                 if req is not None:
@@ -636,29 +786,35 @@ class ServeEngine:
             if self.paged:
                 act = jnp.asarray(
                     np.array([s is not None for s in self.slots]))
-                logits, self.caches = self._decodes[self._active](
+                out, self.caches = self._decodes[self._active](
                     self.params, toks, pos, act, self.caches)
             else:
-                logits, self.caches = self._decodes[self._active](
+                out, self.caches = self._decodes[self._active](
                     self.params, toks, pos, self.caches)
-            logits = np.asarray(logits)
+            # fused greedy: ``out`` is (B,) sampled token ids — B*4 bytes
+            # off-device per step instead of the (B, V) logits matrix
+            out = np.asarray(out)
         dt = time.perf_counter() - t0
         self.step_latencies.append(dt)
         now = time.perf_counter()
-        n_emitted = 0
+        rows = [i for i, req in enumerate(self.slots) if req is not None]
+        if self._fused_sample:
+            nxt_tokens = out[rows]
+        else:
+            nxt_tokens = self._sample_rows(
+                out[rows], [self.slots[i] for i in rows])
         freed = False
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+        for i, nxt in zip(rows, nxt_tokens):
+            req = self.slots[i]
+            nxt = int(nxt)
             self.positions[i] += 1
-            nxt = self._sample(logits[i])
             req.out.append(nxt)
             req.token_times.append(now)
             self.cur_tokens[i] = nxt
-            n_emitted += 1
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.slots[i] = None            # slot freed: continuous batch
+                self._rngs.pop(req.uid, None)
                 if self.paged:
                     freed |= self._free_slot(i)
             elif self._window_free:
@@ -668,7 +824,9 @@ class ServeEngine:
                     i, int(self.positions[i]) - self._window_free)
         if freed:
             self._push_blocks()
-        self._token_lat.extend([dt] * n_emitted)
+        if self.paged:
+            self.pool.replenish()      # watermark top-up, off the admission
+        self._token_lat.extend([dt] * len(rows))   # path (between steps)
         self._control_tick()
 
     def _control_tick(self) -> None:
@@ -688,17 +846,17 @@ class ServeEngine:
             # apply any swap deferred by an in-flight admission
             self._apply_pending_variant()
         elif (self.runtime.active_variant != self._active
-                and self._admission is None):
+                and not self._admissions):
             # runtime owned by someone else (no tenant binding): follow its
             # decision state by polling, as before the tenant protocol
             self.set_variant(self.runtime.active_variant)
 
     @property
     def idle(self) -> bool:
-        """Nothing to do: empty queue, no in-flight background admission,
+        """Nothing to do: empty queue, no in-flight background admissions,
         no active slots. Drivers must check this (not just pending/slots)
         before parking — a paged admission spans multiple steps."""
-        return (not self.pending and self._admission is None
+        return (not self.pending and not self._admissions
                 and all(s is None for s in self.slots))
 
     def run(self, max_steps: int = 0) -> None:
@@ -720,5 +878,5 @@ class ServeEngine:
             raise RuntimeError(
                 f"engine not idle after {steps} steps: "
                 f"{len(self.pending)} pending, "
-                f"admission={'in-flight' if self._admission else 'none'}, "
+                f"{len(self._admissions)} admissions in flight, "
                 f"{sum(s is not None for s in self.slots)} active slots")

@@ -25,6 +25,17 @@ mapping — allocation never happens inside a jitted step:
   Mamba layers the entry also carries the host snapshot of the per-slot SSM
   state at the prefix boundary, restored on a hit.
 
+* **Grouped / speculative allocation.** ``admit(..., reserve_tokens=n)``
+  allocates the prompt's pages AND the request's projected decode pages in
+  ONE all-or-nothing free-list transaction, so the continuous-batching hot
+  loop never touches the allocator between decode steps (``_push_blocks``
+  churn drops to admission boundaries). When the full group does not fit
+  the pool falls back to prompt-only (``ensure_decode_page`` then grows
+  lazily, as before). ``replenish`` is the watermark-based background
+  reservation: called by the engine BETWEEN steps, it evicts LRU prefix
+  entries whenever allocatable headroom drops below the low watermark —
+  moving eviction churn off the admission path.
+
 * **Reclaimable budget (the ``pool_pages`` Pliant knob).** ``set_reclaimed``
   shrinks the allocatable-page limit in quanta; shrinking evicts prefix
   index entries (LRU) — the approximation-tolerant pages, in Pliant terms —
@@ -109,6 +120,7 @@ class AdmitPlan:
     shared_tokens: int           # prompt tokens whose prefill is skipped
     entry: Optional[PrefixEntry]
     register: List[int]          # page boundaries to snapshot+register
+    reserved_pages: int = 0      # speculative decode pages mapped up front
 
 
 class PagePool(CacheStore):
@@ -135,7 +147,9 @@ class PagePool(CacheStore):
             allocs=0, frees=0, prefix_hits=0, prefix_misses=0,
             prefix_registered=0, prefix_evicted=0, tokens_skipped=0,
             blocked_admissions=0, reclaim_events=0, over_limit_allocs=0,
-            register_capped=0, peak_used=0, window_freed=0)
+            register_capped=0, peak_used=0, window_freed=0,
+            grouped_admissions=0, grouped_pages=0, grouped_fallbacks=0,
+            replenish_evictions=0)
 
     # --------------------------------------------------------- accounting --
 
@@ -187,6 +201,25 @@ class PagePool(CacheStore):
         self.stats["allocs"] += 1
         self.stats["peak_used"] = max(self.stats["peak_used"], self.used)
         return pid
+
+    def _alloc_n(self, n: int, *, for_live: bool = False
+                 ) -> Optional[List[int]]:
+        """Allocate ``n`` pages as ONE all-or-nothing free-list transaction:
+        either all ``n`` come back (each refcount 1) or the free list and
+        refcounts are left exactly as found — partially-grabbed pages were
+        never written, so the rollback is an exact undo (no deref/scrub
+        bookkeeping). The grouped-allocation primitive ``admit`` builds on."""
+        got: List[int] = []
+        for _ in range(n):
+            pid = self._alloc(for_live=for_live)
+            if pid is None:
+                for p in reversed(got):
+                    self.ref[p] = 0
+                    self.free.appendleft(p)
+                self.stats["allocs"] -= len(got)
+                return None
+            got.append(pid)
+        return got
 
     def _deref(self, pid: int) -> None:
         self.ref[pid] -= 1
@@ -273,23 +306,33 @@ class PagePool(CacheStore):
 
     # ----------------------------------------------------------- slot ops --
 
-    def admit(self, slot: int, prompt: Sequence[int], tag
-              ) -> Optional[AdmitPlan]:
+    def admit(self, slot: int, prompt: Sequence[int], tag, *,
+              reserve_tokens: int = 0) -> Optional[AdmitPlan]:
         """Build the slot's block table for ``prompt``: map shared prefix
         pages (refcount bump) and allocate private pages for the remainder.
         Returns None — with no state changed — when the pool is over budget
-        (the request stays pending)."""
+        (the request stays pending).
+
+        ``reserve_tokens`` > 0 is the grouped/speculative path: the pool
+        additionally maps the pages covering that many decode tokens past
+        the prompt in the SAME free-list transaction, so the decode loop's
+        ``ensure_decode_page`` finds them already mapped and the block table
+        is pushed once per admission instead of once per page crossing.
+        Reserved pages carry no valid entries yet (their ``ppos`` rows are
+        scrubbed to -1, masking them out of attention) and are freed with
+        the slot like any other private page. When the full group does not
+        fit, admission falls back to prompt-only rather than blocking."""
         P = self.spec.page_size
         assert not self.slot_pages[slot], f"slot {slot} not freed"
         assert len(prompt) <= self.spec.max_pages * P, (len(prompt), self.spec)
-        if -(-len(prompt) // P) > self.spec.usable:
+        prompt_pages = -(-len(prompt) // P)
+        if prompt_pages > self.spec.usable:
             # structurally impossible — retrying every step would spin the
             # engine through max_steps with the request silently unserved
             raise RuntimeError(
-                f"prompt needs {-(-len(prompt) // P)} pages but the pool has "
+                f"prompt needs {prompt_pages} pages but the pool has "
                 f"{self.spec.usable} usable; size n_pages up")
         shared, entry = self.lookup_prefix(prompt, tag)
-        n_need = -(-len(prompt) // P) - shared // P
         # feasibility gate BEFORE touching allocator state: a doomed attempt
         # must not evict prefix entries it cannot use. The engine's
         # page-aware packing retries several candidates per step while the
@@ -301,10 +344,18 @@ class PagePool(CacheStore):
         hit_pages = set(entry.pages) if entry is not None else set()
         evictable = sum(1 for e in self.index.values() for p in e.pages
                         if self.ref[p] == 1 and p not in hit_pages)
-        if n_need > min(max(self.limit - self.used, 0) + evictable,
-                        len(self.free) + evictable):
+        head = min(max(self.limit - self.used, 0) + evictable,
+                   len(self.free) + evictable)
+        want_full = min(max(-(-(len(prompt) + reserve_tokens) // P),
+                            prompt_pages), self.spec.max_pages)
+        n_total = next((c for c in dict.fromkeys([want_full, prompt_pages])
+                        if c - shared // P <= head), None)
+        if n_total is None:
             self.stats["blocked_admissions"] += 1
             return None
+        if n_total < want_full:
+            self.stats["grouped_fallbacks"] += 1
+        n_new = n_total - shared // P
         if shared:
             # pin the hit pages BEFORE allocating fresh ones: under pressure
             # _alloc's LRU eviction may drop the hit entry itself, and
@@ -312,19 +363,13 @@ class PagePool(CacheStore):
             # while this admission is about to map them
             for p in entry.pages:
                 self.ref[p] += 1
-        n_new = n_need
-        fresh = []
-        for _ in range(n_new):
-            pid = self._alloc()
-            if pid is None:
-                for p in fresh:
+        fresh = self._alloc_n(n_new)
+        if fresh is None:              # unreachable after the gate, kept as
+            if shared:                 # a safety net for future drift
+                for p in entry.pages:
                     self._deref(p)
-                if shared:
-                    for p in entry.pages:
-                        self._deref(p)
-                self.stats["blocked_admissions"] += 1
-                return None
-            fresh.append(pid)
+            self.stats["blocked_admissions"] += 1
+            return None
         if shared:
             entry.hits += 1
             entry.last_use = self._tick()
@@ -348,7 +393,11 @@ class PagePool(CacheStore):
                if keys[b // P - 1] not in self.index]
         if len(prompt) // P > self.max_register_pages:
             self.stats["register_capped"] += 1
-        return AdmitPlan(shared, entry, reg)
+        reserved = n_total - prompt_pages
+        if reserved:
+            self.stats["grouped_admissions"] += 1
+            self.stats["grouped_pages"] += reserved
+        return AdmitPlan(shared, entry, reg, reserved)
 
     def ensure_decode_page(self, slot: int, position: int) -> bool:
         """Map the page holding ``position`` before a decode write lands
@@ -401,6 +450,59 @@ class PagePool(CacheStore):
         self.slot_pages[slot] = []
         self.blocks[slot] = 0
         return True
+
+    # --------------------------------------------------------- background --
+
+    def replenish(self, *, low: Optional[int] = None,
+                  high: Optional[int] = None) -> int:
+        """Watermark-based background reservation: keep immediately
+        allocatable headroom (free pages under the reclaim limit) above a
+        low watermark by evicting LRU prefix entries, topping back up to the
+        high watermark. The engine calls this BETWEEN steps, so the eviction
+        churn that ``_alloc`` would otherwise run inside an admission
+        happens off the hot path. Returns the number of entries evicted."""
+        if low is None:
+            low = max(1, self.spec.usable // 8)
+        if high is None:
+            high = min(2 * low, self.spec.usable)
+
+        def headroom() -> int:
+            return min(len(self.free), max(self.limit - self.used, 0))
+
+        if headroom() >= low:
+            return 0
+        evicted = 0
+        while headroom() < high and self.index:
+            self._evict_lru()
+            evicted += 1
+        self.stats["replenish_evictions"] += evicted
+        return evicted
+
+    def assert_consistent(self) -> None:
+        """Audit the allocator invariants (test hook): every physical page
+        is either free (refcount 0, unmapped, unpinned) or accounted for
+        EXACTLY by slot mappings + prefix-index pins — so no sequence of
+        grouped/speculative admissions, watermark evictions, completions,
+        and reclaims can strand a page."""
+        want: collections.Counter = collections.Counter()
+        for pages in self.slot_pages:
+            want.update(pages)
+        for e in self.index.values():
+            want.update(e.pages)
+        free = set(self.free)
+        assert len(free) == len(self.free), "free list holds duplicates"
+        assert 0 not in free, "null page on the free list"
+        for pid in range(1, self.spec.n_pages):
+            if pid in free:
+                assert self.ref[pid] == 0 and want[pid] == 0, \
+                    (pid, int(self.ref[pid]), want[pid])
+            else:
+                assert int(self.ref[pid]) == want[pid] > 0, \
+                    (pid, int(self.ref[pid]), want[pid])
+        for slot in range(self.batch_slots):
+            mapped = sorted(int(p) for p in self.blocks[slot] if p != 0)
+            assert mapped == sorted(self.slot_pages[slot]), \
+                (slot, mapped, self.slot_pages[slot])
 
     # ------------------------------------------------------------ reclaim --
 

@@ -124,7 +124,8 @@ def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
 
 
 def paged_prefill_chunk(params, tokens, start, caches, slot,
-                        cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+                        cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
+                        dyn_scatter: bool = False):
     """One prompt chunk for ONE slot of the paged engine caches.
 
     tokens: (1, C); start: traced scalar absolute position; slot: traced
@@ -147,7 +148,7 @@ def paged_prefill_chunk(params, tokens, start, caches, slot,
             p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
             h, nc, _ = block_prefill_paged(kind, p, h, positions,
                                            group_caches[j], cfg, knobs,
-                                           slot=slot)
+                                           slot=slot, dyn_scatter=dyn_scatter)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

@@ -140,23 +140,34 @@ def make_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
 
 def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                           ep_axis: Optional[str] = None, mesh=None,
-                          use_kernel: Optional[bool] = None):
+                          use_kernel: Optional[bool] = None,
+                          dynamic_scatter: bool = False,
+                          sample_greedy: bool = False):
     """Returns step(params, tokens, position, active, caches)
-    -> (logits, new_caches) — the paged engine's decode cell.
+    -> (logits_or_tokens, new_caches) — the paged engine's decode cell.
 
     ``active`` (B,) bool masks per-slot cache writes so decode steps can
     interleave with a background admission: the admitting slot's mapped
     pages / SSM rows must not receive garbage from its dead batch row.
     ``use_kernel`` overrides the fused-kernel dispatch: sharded engines
     pass False — the scalar-prefetch Pallas kernel does not partition
-    under GSPMD, the gather path is the multi-device story."""
+    under GSPMD, the gather path is the multi-device story.
+    ``dynamic_scatter`` selects the O(1)-per-entry dynamic cache write
+    (single-device pools only — see ``attention.paged_decode_attention``).
+    ``sample_greedy`` fuses argmax into the executable and returns (B,)
+    int32 tokens instead of (B, V) logits: the greedy engine then moves
+    B*4 bytes per step off-device instead of the full logits matrix."""
     decode = api.decode_fn(cfg)
     assert cfg.family != "encdec", "paged serving: decoder-only path"
 
     def step(params, tokens, position, active, caches):
-        return decode(params, tokens, position, caches, knobs=knobs,
-                      ep_axis=ep_axis, mesh=mesh, active=active,
-                      use_kernel=use_kernel)
+        logits, caches = decode(params, tokens, position, caches, knobs=knobs,
+                                ep_axis=ep_axis, mesh=mesh, active=active,
+                                use_kernel=use_kernel,
+                                dyn_scatter=dynamic_scatter)
+        if sample_greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+        return logits, caches
     return step
 
 
@@ -174,18 +185,21 @@ def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
     return step
 
 
-def make_paged_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+def make_paged_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
+                              *, dynamic_scatter: bool = False):
     """Returns step(params, tokens, start, caches, slot) -> (logits, caches).
 
     The paged engine's admission cell: one prompt chunk written straight
     into the batched page-pool caches at ``slot``'s block-table row. Both
     ``start`` and ``slot`` are traced — ONE executable per (variant, chunk
-    length) serves every chunk of every slot."""
+    length) serves every chunk of every slot. ``dynamic_scatter`` as in
+    ``make_paged_serve_step``."""
     from repro.serve import prefill as prefill_mod
 
     def step(params, tokens, start, caches, slot):
         return prefill_mod.paged_prefill_chunk(params, tokens, start, caches,
-                                               slot, cfg, knobs=knobs)
+                                               slot, cfg, knobs=knobs,
+                                               dyn_scatter=dynamic_scatter)
     return step
 
 

@@ -118,6 +118,56 @@ def test_active_mask_blocks_inactive_writes(use_kernel):
     assert int(c_new.ppos[tail0, 6 % P]) == 6
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_speculative_future_pages_do_not_change_output(use_kernel):
+    """Grouped admission maps a request's projected decode pages up front
+    (scrubbed: ``ppos`` = -1). Decode output must be bit-identical whether
+    or not those future pages are mapped, regardless of their K/V contents
+    — the kernel's index map redirects wholly-future pages to the null
+    page; the gather path masks their empty ``ppos`` rows."""
+    lengths = [5, 9]
+    cfg, params, x, position, cache = _setup("phi4-mini-3.8b", lengths)
+    o1, _ = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, use_kernel=use_kernel,
+        interpret=use_kernel)
+    block = np.asarray(cache.block).copy()
+    used = {int(p) for p in block.ravel()}
+    fresh = [p for p in range(1, int(cache.kp.shape[0])) if p not in used]
+    scramble = []
+    for b, L in enumerate(lengths):
+        for m in range(-(-(L + 1) // P), M):    # wholly past the query pos
+            block[b, m] = scramble_pid = fresh.pop()
+            scramble.append(scramble_pid)
+    kp = cache.kp.at[jnp.asarray(scramble)].set(1e3)
+    vp = cache.vp.at[jnp.asarray(scramble)].set(-1e3)
+    c2 = cache._replace(kp=kp, vp=vp, block=jnp.asarray(block))
+    o2, _ = attn_mod.paged_decode_attention(
+        params, x, position, c2, cfg, use_kernel=use_kernel,
+        interpret=use_kernel)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@pytest.mark.parametrize("active_mask", [None, (True, False)])
+def test_dyn_scatter_write_matches_one_hot(active_mask):
+    """The dynamic-index cache write (single-device engines) must land the
+    decode token bit-identically to the one-hot masked scatter on every
+    LIVE page; inactive rows write only the never-read null page."""
+    cfg, params, x, position, cache = _setup("phi4-mini-3.8b", [6, 9])
+    active = (None if active_mask is None
+              else jnp.asarray(np.asarray(active_mask)))
+    o1, c1 = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, active=active, use_kernel=False)
+    o2, c2 = attn_mod.paged_decode_attention(
+        params, x, position, cache, cfg, active=active, use_kernel=False,
+        dyn_scatter=True)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(c1.block), np.asarray(c2.block))
+    # page 0 is the trash page: dyn-scatter parks masked rows there,
+    # one-hot never touches it — both are fine, nothing ever reads it
+    for a, b in ((c1.kp, c2.kp), (c1.vp, c2.vp), (c1.ppos, c2.ppos)):
+        np.testing.assert_array_equal(np.asarray(a[1:]), np.asarray(b[1:]))
+
+
 def test_mamba_decode_active_mask_preserves_state():
     from repro.models import mamba2
     cfg = get_config("mamba2-780m-smoke")
