@@ -8,7 +8,11 @@ per-live-page cost model — the numbers behind the explorer's paged decode
 pricing, persisted to ``BENCH_kernels.json``."""
 from __future__ import annotations
 
+import functools
 import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +80,7 @@ def main(rows: Rows):
              f"interpret;max_err={float(jnp.max(jnp.abs(o_k - o_naive))):.2e}")
 
     paged_decode_rows(rows)
+    sharded_decode_rows(rows)
     return rows
 
 
@@ -172,3 +177,177 @@ def paged_decode_rows(rows: Rows):
                  f"live_pages={B * live};gather_bytes={gather_b:.0f}")
     (RESULTS_DIR / "BENCH_kernels.json").write_text(json.dumps(out, indent=1))
     return rows
+
+
+# ----------------------------------------------------- sharded decode rows --
+# The multi-device fast path: the fused kernel shard_map'd over the
+# slot-affinity pool layout (models.attention._sharded_write_attend) vs the
+# GSPMD dense-gather fallback, on 8 simulated devices. Runs in a subprocess
+# because the device count is fixed at jax import.
+
+_SHARD_B, _SHARD_G, _SHARD_R, _SHARD_HD = 8, 2, 2, 32
+_SHARD_P, _SHARD_M, _SHARD_NSH = 8, 8, 4
+_SHARD_PAGES = 80                       # 4 shards x 20 (null + 16 live + slack)
+
+
+def _sharded_paged_case(live_per_slot: int, *, quantized=False, seed=0):
+    """Slot-affinity layout: slot b's pages all come from the contiguous
+    page range of shard ``b * n_shards // B``; each shard's first page is
+    its local null sentinel (never mapped). Also returns the step's new K/V
+    entries so the write+attend region can be benched as one unit."""
+    B, G, hd = _SHARD_B, _SHARD_G, _SHARD_HD
+    Pg, nsh, n_pages = _SHARD_P, _SHARD_NSH, _SHARD_PAGES
+    chunk = n_pages // nsh
+    rng = np.random.default_rng(seed)
+    if quantized:
+        kp = rng.integers(-127, 128, (n_pages, Pg, G, hd)).astype(np.int8)
+        vp = rng.integers(-127, 128, (n_pages, Pg, G, hd)).astype(np.int8)
+        knew = rng.integers(-127, 128, (B, G, hd)).astype(np.int8)
+        vnew = rng.integers(-127, 128, (B, G, hd)).astype(np.int8)
+    else:
+        kp = (rng.normal(size=(n_pages, Pg, G, hd)) * 0.3).astype(np.float32)
+        vp = rng.normal(size=(n_pages, Pg, G, hd)).astype(np.float32)
+        knew = (rng.normal(size=(B, G, hd)) * 0.3).astype(np.float32)
+        vnew = rng.normal(size=(B, G, hd)).astype(np.float32)
+    block = np.zeros((B, _SHARD_M), np.int32)
+    ppos = np.full((n_pages, Pg), -1, np.int32)
+    nxt = [s * chunk + 1 for s in range(nsh)]
+    for b in range(B):
+        s = b * nsh // B
+        for lp in range(live_per_slot):
+            pid = nxt[s]
+            nxt[s] += 1
+            block[b, lp] = pid
+            ppos[pid] = np.arange(lp * Pg, (lp + 1) * Pg)
+    position = np.full((B,), live_per_slot * Pg - Pg // 2 - 1, np.int32)
+    q = (rng.normal(size=(B, G, _SHARD_R, hd)) * 0.3).astype(np.float32)
+    return q, kp, vp, ppos, block, position, knew, vnew
+
+
+def _sharded_child():
+    """Runs under XLA_FLAGS=--xla_force_host_platform_device_count=8; prints
+    one SHARDED_JSON line the parent merges into BENCH_kernels.json."""
+    from jax.sharding import NamedSharding, PartitionSpec as Psp
+
+    from repro.dist.sharding import PagedDecodePlan
+    from repro.kernels.paged_attention import sharded_decode_hbm_bytes
+    from repro.launch.mesh import make_mesh
+    from repro.models import attention as attn_mod
+
+    assert jax.device_count() >= 8, jax.device_count()
+    B, G, R, hd = _SHARD_B, _SHARD_G, _SHARD_R, _SHARD_HD
+    Pg, M, nsh = _SHARD_P, _SHARD_M, _SHARD_NSH
+    mesh = make_mesh((nsh, 2), ("data", "model"))
+    plan = PagedDecodePlan("data", nsh, "model")
+    active = jnp.ones((B,), bool)
+    out = {"mesh": {"data": nsh, "model": 2}, "n_shards": nsh}
+
+    def fused_fn(window, kv_scale):
+        return jax.jit(functools.partial(
+            attn_mod._sharded_write_attend, mesh=mesh, plan=plan,
+            window=window, kv_scale=kv_scale, cap=0.0, interpret=True))
+
+    def gather_jit(window, kv_scale):
+        sh = lambda *s: NamedSharding(mesh, Psp(*s))
+        pool = sh("data", None, "model", None)
+        return jax.jit(
+            functools.partial(_gather_path, window=window,
+                              kv_scale=kv_scale),
+            in_shardings=(sh("data", "model"), pool, pool,
+                          sh("data", None), sh("data", None), sh("data")))
+
+    def written_pool(case):
+        # the gather comparator attends a pre-written pool: emulate the
+        # step's dynamic write on host so both paths see identical caches
+        q, kp, vp, ppos, block, position, knew, vnew = case
+        kp2, vp2 = kp.copy(), vp.copy()
+        for b in range(B):
+            phys, off = block[b, position[b] // Pg], position[b] % Pg
+            kp2[phys, off], vp2[phys, off] = knew[b], vnew[b]
+        return kp2, vp2
+
+    variants = [("fp32", dict(window=0, kv_scale=0.0), dict()),
+                ("int8", dict(window=0, kv_scale=0.05),
+                 dict(quantized=True)),
+                ("windowed", dict(window=16, kv_scale=0.0), dict())]
+    for name, kw, mk in variants:
+        case = _sharded_paged_case(4, **mk)
+        q, kp, vp, ppos, block, position, knew, vnew = case
+        cache = attn_mod.PagedKVCache(*map(jnp.asarray,
+                                           (kp, vp, ppos, block)))
+        ff = fused_fn(**kw)
+        args = tuple(map(jnp.asarray, (q, knew, vnew, position)))
+        t_f, (o_f, _) = timed(lambda: jax.block_until_ready(
+            ff(*args, active, cache)))
+        kp2, vp2 = written_pool(case)
+        gf = gather_jit(**kw)
+        gargs = tuple(map(jnp.asarray, (q, kp2, vp2, ppos, block, position)))
+        t_g, o_g = timed(lambda: jax.block_until_ready(gf(*gargs)))
+        err = float(jnp.max(jnp.abs(o_f - o_g)))
+        out[name] = {"gather_gspmd_us": t_g * 1e6,
+                     "fused_sharded_us": t_f * 1e6, "max_err": err}
+
+    # per-device bytes: fused traffic scales with live pages PER SHARD;
+    # gather from the compiled GSPMD executable's cost_analysis
+    for label, live in (("sparse", 2), ("dense", 8)):
+        case = _sharded_paged_case(live)
+        q, kp, vp, ppos, block, position, knew, vnew = case
+        kp2, vp2 = written_pool(case)
+        gf = gather_jit(0, 0.0)
+        gargs = tuple(map(jnp.asarray, (q, kp2, vp2, ppos, block, position)))
+        cost = gf.lower(*gargs).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        per_dev = sharded_decode_hbm_bytes(
+            B * live, Pg, G, hd, n_shards=nsh, kv_bytes=4, batch=B,
+            n_heads=G * R, max_pages=M)
+        total = sharded_decode_hbm_bytes(
+            B * live, Pg, G, hd, n_shards=1, kv_bytes=4, batch=B,
+            n_heads=G * R, max_pages=M)
+        out[f"bytes_{label}"] = {
+            "live_pages": B * live,
+            "live_per_shard": B * live // nsh,
+            "gather_bytes": float(cost.get("bytes accessed", 0.0)),
+            "fused_bytes_per_device": per_dev,
+            "fused_bytes_total": total,
+        }
+    print("SHARDED_JSON:" + json.dumps(out))
+
+
+def sharded_decode_rows(rows: Rows):
+    """Spawn the 8-device child, merge its account under ``sharded`` in
+    BENCH_kernels.json, and emit the comparison rows."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernel_bench", "--sharded-child"],
+        capture_output=True, text=True, env=env)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith("SHARDED_JSON:")), None)
+    assert line is not None, (proc.stdout, proc.stderr[-2000:])
+    sharded = json.loads(line[len("SHARDED_JSON:"):])
+    path = RESULTS_DIR / "BENCH_kernels.json"
+    out = json.loads(path.read_text())
+    out["sharded"] = sharded
+    path.write_text(json.dumps(out, indent=1))
+    for name in ("fp32", "int8", "windowed"):
+        s = sharded[name]
+        rows.add(f"kernel.paged_decode.sharded.{name}.gather_gspmd",
+                 s["gather_gspmd_us"], "GSPMD dense-gather fallback")
+        rows.add(f"kernel.paged_decode.sharded.{name}.fused",
+                 s["fused_sharded_us"],
+                 f"shard_map x{sharded['n_shards']};interpret;"
+                 f"max_err={s['max_err']:.2e}")
+    for label in ("sparse", "dense"):
+        b = sharded[f"bytes_{label}"]
+        rows.add(f"kernel.paged_decode.sharded.bytes.{label}",
+                 b["fused_bytes_per_device"],
+                 f"live_per_shard={b['live_per_shard']};"
+                 f"total={b['fused_bytes_total']:.0f};"
+                 f"gather_bytes={b['gather_bytes']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--sharded-child" in sys.argv:
+        _sharded_child()

@@ -145,6 +145,9 @@ def main(rows: Rows):
         eng.admit_latencies.clear()
         eng.step_admission_chunks.clear()
         st = _drive(eng, cfg, np.random.default_rng(5), **cmp_trace)
+        st["mesh_shape"] = dict(eng.mesh.shape) if eng.mesh is not None \
+            else None
+        st["sharded_kernel"] = eng.sharded_kernel
         if paged:
             s = eng.pool.stats
             st["pool_occupancy_peak"] = s["peak_used"] / eng.pool.spec.usable

@@ -116,6 +116,57 @@ def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
     }
 
 
+# ------------------------------------------------------- paged decode plan --
+
+class PagedDecodePlan:
+    """Slot-affinity layout of the sharded fused paged decode: the batch
+    mesh axes the slot/page dims split over, the resulting shard count, and
+    the mesh axis (if any) the kv_heads dim additionally splits over.
+
+    The plan is a pure function of (cfg, mesh, batch_slots, n_pages), so the
+    engine (pool sizing), ``cache_shardings`` (device placement), and the
+    traced decode step (shard_map specs + block-table rebasing) all derive
+    the SAME layout independently — no side channel between host allocator
+    and compiled executable."""
+
+    def __init__(self, batch_axes, n_shards: int, kv_head_axis):
+        self.batch_axes = batch_axes      # mesh axis name or tuple of names
+        self.n_shards = n_shards
+        self.kv_head_axis = kv_head_axis  # "model" or None (replicated)
+
+    def __repr__(self):
+        return (f"PagedDecodePlan(batch_axes={self.batch_axes!r}, "
+                f"n_shards={self.n_shards}, "
+                f"kv_head_axis={self.kv_head_axis!r})")
+
+
+def paged_decode_plan(cfg: ModelConfig, mesh, batch_slots: int,
+                      n_pages: int = 0):
+    """(plan, reason) for sharding the fused paged-attention decode kernel.
+
+    Returns ``(PagedDecodePlan, "")`` when the pool can be split with slot
+    affinity — slots and physical pages partitioned over the same batch
+    axes, so each device's kernel invocation resolves its block tables
+    entirely against local pages — else ``(None, reason)`` and the caller
+    falls back to the GSPMD gather path. ``n_pages`` <= 0 skips the page-dim
+    divisibility check (pool sizing rounds it up to fit afterwards)."""
+    if mesh is None:
+        return None, "no mesh (single device)"
+    bspec = batch_pspec(batch_slots, mesh)
+    if not len(bspec):
+        return None, (f"batch_slots={batch_slots} does not divide any batch "
+                      "mesh axis — slots cannot split with affinity")
+    b = bspec[0]
+    n = _axis_size(mesh, b)
+    if n_pages > 0 and n_pages % n != 0:
+        return None, (f"n_pages={n_pages} does not split over batch axes "
+                      f"{b!r} (size {n})")
+    g_ax = ("model" if ("model" in mesh.shape
+                        and cfg.n_kv_heads % mesh.shape["model"] == 0)
+            else None)
+    return PagedDecodePlan(b, n, g_ax), ""
+
+
 # ----------------------------------------------------------------- caches --
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
@@ -125,11 +176,15 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 
     Dense KV caches shard the cache-length dim over ``seq_axis`` (GSPMD
     lowers the attention softmax over it to partial reductions) and the
-    batch dim over the batch axes. Paged pools (``paged`` = PageSpec) shard
-    the physical-page dim over ``seq_axis`` instead — the page gather and
-    the one-hot page scatter are both elementwise over it — with block
-    tables sharded over batch. Mamba states have no sequence dim; they shard
-    batch only. Returns trees with the exact structure of ``init_caches`` /
+    batch dim over the batch axes. Paged pools (``paged`` = PageSpec) come
+    in two layouts: a slot-affinity spec (``n_shards`` > 1) shards the
+    physical-page dim over the BATCH axes — the same contiguous split the
+    block table's slot dim gets, so a slot's pages are device-local and the
+    fused kernel runs per-shard under shard_map — with the kv_heads dim
+    optionally split over ``model``; a legacy spec shards the page dim over
+    ``seq_axis`` (the gather and the one-hot scatter are both elementwise
+    over it). Mamba states have no sequence dim; they shard batch only.
+    Returns trees with the exact structure of ``init_caches`` /
     ``init_paged_caches``.
     """
     from repro.models import api
@@ -150,6 +205,19 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     def one(c):
         # leaves are group-stacked: dim 0 = layer groups (scan carried)
         if isinstance(c, PagedKVCache):
+            if getattr(paged, "n_shards", 1) > 1:
+                # slot-affinity layout: pages split over the batch axes like
+                # the slots themselves; kv_heads over model when divisible
+                pg = batch_ax(c.kp.shape[1])
+                g_ax = ("model" if ("model" in mesh.shape and
+                                    c.kp.shape[3] % mesh.shape["model"] == 0)
+                        else None)
+                kv = NamedSharding(mesh, P(None, pg, None, g_ax, None))
+                return PagedKVCache(
+                    kp=kv, vp=kv,
+                    ppos=NamedSharding(mesh, P(None, pg, None)),
+                    block=NamedSharding(
+                        mesh, P(None, batch_ax(c.block.shape[1]), None)))
             pg = seq_ax(c.kp.shape[1])
             kv = NamedSharding(mesh, P(None, pg, None, None, None))
             return PagedKVCache(

@@ -95,18 +95,21 @@ def _kernel(block_ref, pos_ref, q_ref, k_ref, v_ref, ppos_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "window", "kv_scale", "cap", "interpret"))
-def paged_attention(q, kp, vp, ppos, block, position, *, window: int = 0,
-                    kv_scale: float = 0.0, cap: float = 0.0,
-                    interpret: bool = False):
-    """Fused paged decode attention.
+def paged_attention_impl(q, kp, vp, ppos, block, position, *, window: int = 0,
+                         kv_scale: float = 0.0, cap: float = 0.0,
+                         interpret: bool = False):
+    """Fused paged decode attention (unjitted body).
 
     q: (B, G, R, hd) — current token's queries, grouped by KV head;
     kp/vp: (n_pages, P, G, hd) physical page pools (int8 when ``kv_scale``);
     ppos: (n_pages, P) absolute positions (-1 empty); block: (B, M) int32
     physical page ids (0 = unmapped); position: (B,) absolute query position.
     Returns (B, G, R, hd) in q.dtype.
+
+    Use ``paged_attention`` (the jitted wrapper) from op-level code; this
+    raw body exists so ``models.attention`` can call the kernel INSIDE a
+    ``shard_map`` region with per-shard (rebased) block tables — a nested
+    jit there would re-trace per shard for nothing.
     """
     B, G, R, hd = q.shape
     n_pages, P = ppos.shape
@@ -168,6 +171,10 @@ def paged_attention(q, kp, vp, ppos, block, position, *, window: int = 0,
     )(block, position, q, kp, vp, ppos)
 
 
+paged_attention = functools.partial(jax.jit, static_argnames=(
+    "window", "kv_scale", "cap", "interpret"))(paged_attention_impl)
+
+
 def page_hbm_bytes(page_size: int, n_kv_heads: int, head_dim: int, *,
                    kv_bytes: int = 4) -> int:
     """HBM bytes one live page streams through the fused kernel: K + V
@@ -190,3 +197,21 @@ def decode_hbm_bytes(live_pages: int, page_size: int, n_kv_heads: int,
     tables = batch * 4 * (max_pages + 1)        # block rows + positions, int32
     return live_pages * page_hbm_bytes(page_size, n_kv_heads, head_dim,
                                        kv_bytes=kv_bytes) + qo + tables
+
+
+def sharded_decode_hbm_bytes(live_pages: int, page_size: int,
+                             n_kv_heads: int, head_dim: int, *,
+                             n_shards: int = 1, kv_bytes: int = 4,
+                             batch: int = 1, n_heads: int = 0,
+                             q_bytes: int = 4, max_pages: int = 0) -> int:
+    """PER-DEVICE attention HBM bytes of the shard_map'd fused decode under
+    slot-affinity placement: each device runs the kernel over only its own
+    slots' block tables, so it streams ceil(live/n_shards) pages for
+    ceil(batch/n_shards) query rows (balanced placement — the allocator pins
+    slot s to shard s*n_shards//batch_slots). The per-device traffic scales
+    with live pages per shard, NOT slots x max_len — the acceptance metric
+    of the sharded kernel path."""
+    return decode_hbm_bytes(
+        -(-live_pages // n_shards), page_size, n_kv_heads, head_dim,
+        kv_bytes=kv_bytes, batch=-(-batch // n_shards), n_heads=n_heads,
+        q_bytes=q_bytes, max_pages=max_pages)

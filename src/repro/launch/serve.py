@@ -129,6 +129,7 @@ def main(argv=None):
                       n_pages=args.pool_pages,
                       max_admission_chunks=args.max_admission_chunks,
                       qos_guard=args.qos_guard)
+    print(f"dispatch: {eng.explain_dispatch()}")
     if args.variant is not None:
         eng.set_variant(names.index(args.variant))
 

@@ -12,6 +12,8 @@ FLOPs and HBM traffic of the attention loop at bounded quality loss.
 """
 from __future__ import annotations
 
+import collections
+import sys
 from typing import NamedTuple, Optional
 
 import jax
@@ -303,12 +305,124 @@ def _gather_pages(cache: PagedKVCache, block, q_positions, *, window: int):
     return gk, gv, gpos, valid
 
 
+# Trace-time audit of which paged-decode path each compile took, keyed by
+# dispatch outcome (kernel_sharded / gather_mesh / kernel_single /
+# gather_single). Counts bump while TRACING, so after a jitted step is
+# compiled the counter tells tests which path is in the executable — the
+# gather fallback under a mesh is otherwise invisible from outside.
+DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+_GATHER_WARNED = set()
+
+
+def _warn_gather(reason: str) -> None:
+    """One line per distinct reason: a mesh silently paying O(slots x
+    max_len) gather traffic was the regression class this replaces."""
+    if reason in _GATHER_WARNED:
+        return
+    _GATHER_WARNED.add(reason)
+    print("repro: paged decode under a mesh is taking the GSPMD dense "
+          f"gather path — {reason}; the fused kernel is not sharded, so "
+          "decode HBM traffic is O(slots x max_len) per device",
+          file=sys.stderr)
+
+
+def explain_dispatch(cfg: ModelConfig, mesh, *, batch_slots: int,
+                     n_pages: int = 0,
+                     use_kernel: Optional[bool] = None) -> str:
+    """One-line description of the paged-decode path this configuration
+    dispatches to (surfaced by ``launch/serve.py`` at startup)."""
+    from repro.kernels import ops as kops
+    if use_kernel is None:
+        use_kernel = kops._on_tpu()
+    if mesh is None:
+        return ("paged decode: fused Pallas kernel, single device"
+                if use_kernel else
+                "paged decode: dense gather reference, single device "
+                "(kernel off: not on TPU)")
+    if not use_kernel:
+        return ("paged decode: GSPMD dense gather under mesh "
+                "(kernel off: not on TPU)")
+    from repro.dist.sharding import paged_decode_plan
+    plan, reason = paged_decode_plan(cfg, mesh, batch_slots, n_pages)
+    if plan is not None:
+        heads = (f"kv_heads over {plan.kv_head_axis!r}"
+                 if plan.kv_head_axis else "kv_heads replicated")
+        return ("paged decode: fused kernel shard_map'd over "
+                f"{plan.batch_axes!r} ({plan.n_shards} slot-affinity "
+                f"shards, {heads})")
+    return f"paged decode: GSPMD dense gather FALLBACK under mesh — {reason}"
+
+
+def _flat_axis_index(mesh, axes):
+    """Linear shard index over (possibly several) mesh axes, major-first —
+    matches how GSPMD linearizes a dim sharded over an axis tuple."""
+    flat = axes if isinstance(axes, tuple) else (axes,)
+    idx = None
+    for a in flat:
+        i = jax.lax.axis_index(a)
+        idx = i if idx is None else idx * mesh.shape[a] + i
+    return idx
+
+
+def _sharded_write_attend(q, k_store, v_store, position, active,
+                          cache: PagedKVCache, mesh, plan, *, window: int,
+                          kv_scale: float, cap: float, interpret: bool):
+    """ONE shard_map region: slot-affinity dynamic cache write + the fused
+    Pallas kernel, zero collectives.
+
+    Under the slot-affinity layout (``serve.pages``: slot ``s``'s pages all
+    live in its shard's contiguous page range) every device holds exactly
+    the pages its slots' block tables reference, so inside the region the
+    global page ids rebase to local ones (``pid - shard * chunk``; the 0
+    sentinel maps to the shard's local null page 0) and both the
+    dynamic-index ``.at[page, offset].set`` write — illegal under GSPMD on a
+    sharded page dim — and the scalar-prefetch kernel grid become plain
+    single-device programs per shard. Inactive rows write into the local
+    null page (never read). q: (B, G, R, hd); k_store/v_store: (B, G, hd)
+    at cache dtype. Returns (o (B, G, R, hd), new PagedKVCache).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import compat
+    from repro.kernels.paged_attention import paged_attention_impl
+    b, g = plan.batch_axes, plan.kv_head_axis
+    n_pages, Pg = cache.ppos.shape
+    chunk = n_pages // plan.n_shards
+
+    def inner(q_l, k_l, v_l, pos_l, act_l, kp_l, vp_l, ppos_l, block_l):
+        base = _flat_axis_index(mesh, b) * chunk
+        lblock = jnp.where(block_l == 0, 0, block_l - base)
+        phys = jnp.take_along_axis(lblock, (pos_l // Pg)[:, None],
+                                   axis=1)[:, 0]
+        tgt = jnp.where(act_l, phys, 0)
+        off = pos_l % Pg
+        nkp = kp_l.at[tgt, off].set(k_l)
+        nvp = vp_l.at[tgt, off].set(v_l)
+        nppos = ppos_l.at[tgt, off].set(pos_l)
+        o = paged_attention_impl(q_l, nkp, nvp, nppos, lblock, pos_l,
+                                 window=window, kv_scale=kv_scale, cap=cap,
+                                 interpret=interpret)
+        return o, nkp, nvp, nppos
+
+    q_spec = P(b, g, None, None)
+    kv_spec = P(b, None, g, None)
+    fn = compat.shard_map(
+        inner, mesh=mesh,
+        in_specs=(q_spec, P(b, g, None), P(b, g, None), P(b), P(b),
+                  kv_spec, kv_spec, P(b, None), P(b, None)),
+        out_specs=(q_spec, kv_spec, kv_spec, P(b, None)),
+        check_vma=False)
+    o, nkp, nvp, nppos = fn(q, k_store, v_store, position, active,
+                            cache.kp, cache.vp, cache.ppos, cache.block)
+    return o, PagedKVCache(nkp, nvp, nppos, cache.block)
+
+
 def paged_decode_attention(params, x, position, cache: PagedKVCache,
                            cfg: ModelConfig, *, window: int = 0,
                            kv_scale: float = 0.0, active=None,
                            use_kernel: Optional[bool] = None,
                            interpret: bool = False,
-                           dyn_scatter: bool = False):
+                           dyn_scatter: bool = False, mesh=None):
     """One-token decode against the paged pool. x: (B,1,D); position: (B,).
 
     The new K/V entry scatters into the slot's private tail page (host-side
@@ -335,6 +449,13 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
     a partitioned page dim lowers to all-gather traffic, which is exactly
     what the one-hot form avoids. Inactive rows are redirected to the null
     page instead of suppressed, an equivalent no-op (page 0 is never read).
+
+    ``mesh`` + kernel requested: when ``dist.sharding.paged_decode_plan``
+    finds a slot-affinity layout, write AND kernel both run inside ONE
+    ``shard_map`` region (``_sharded_write_attend``) — each device's kernel
+    invocation prefetches only its shard's pages, so multi-device decode
+    runs at single-device speed per shard. Otherwise the gather fallback
+    below is taken and ``_warn_gather`` says so (once per reason).
     """
     from repro.kernels import ops as kops
     from repro.kernels.paged_attention import paged_attention
@@ -353,6 +474,29 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
         k_store = k.astype(cache.kp.dtype)
         v_store = v.astype(cache.vp.dtype)
     n_pages, P = cache.ppos.shape
+    if use_kernel is None:
+        use_kernel = kops._on_tpu()
+    if mesh is not None:
+        if use_kernel:
+            from repro.dist.sharding import paged_decode_plan
+            plan, reason = paged_decode_plan(cfg, mesh, B, n_pages)
+        else:
+            plan, reason = None, "use_kernel=False (kernel disabled)"
+        if plan is not None:
+            DISPATCH_COUNTS["kernel_sharded"] += 1
+            act = (active if active is not None
+                   else jnp.ones((B,), jnp.bool_))
+            o, new_cache = _sharded_write_attend(
+                q[:, 0].reshape(B, G, R, hd), k_store[:, 0], v_store[:, 0],
+                position, act, cache, mesh, plan, window=window,
+                kv_scale=kv_scale, cap=cfg.attn_softcap, interpret=interpret)
+            return o.reshape(B, 1, cfg.q_dim) @ params["wo"], new_cache
+        DISPATCH_COUNTS["gather_mesh"] += 1
+        _warn_gather(reason)
+        use_kernel = False
+    else:
+        DISPATCH_COUNTS["kernel_single" if use_kernel
+                        else "gather_single"] += 1
     phys = jnp.take_along_axis(cache.block, (position // P)[:, None],
                                axis=1)[:, 0]              # (B,)
     if dyn_scatter:
@@ -373,8 +517,6 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
         nppos = _page_scatter(sel, write, cache.ppos, position)
     new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
 
-    if use_kernel is None:
-        use_kernel = kops._on_tpu()
     if use_kernel:
         qk = q[:, 0].reshape(B, G, R, hd)
         o = paged_attention(qk, nkp, nvp, nppos, cache.block, position,

@@ -144,14 +144,16 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
                  ep_axis: Optional[str] = None, mesh=None,
                  enc_out: Optional[jax.Array] = None, active=None,
                  use_kernel: Optional[bool] = None,
-                 dyn_scatter: bool = False):
+                 dyn_scatter: bool = False, interpret: bool = False):
     """Single-token decode. Returns (h, new_cache, aux).
 
     ``active`` (B,) bool masks per-slot cache writes (paged engines whose
     decode interleaves with background admission); None = all rows live.
-    ``use_kernel`` forwards the paged-attention dispatch override (sharded
-    engines force the GSPMD-safe gather path); ``dyn_scatter`` selects the
-    dynamic-index cache write for unsharded paged pools."""
+    ``use_kernel`` forwards the paged-attention dispatch override;
+    ``dyn_scatter`` selects the dynamic-index cache write for unsharded
+    paged pools; under a ``mesh`` the paged path shard_maps the fused
+    kernel when the pool layout allows (``attention.paged_decode_attention``)
+    and ``interpret`` runs that kernel in Pallas interpret mode (CPU CI)."""
     aux = jnp.zeros((), jnp.float32)
     prec = knobs.matmul_precision
     if kind == MAMBA:
@@ -166,7 +168,7 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
         y, new_cache = attn_mod.paged_decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,
             kv_scale=kv_scale, active=active, use_kernel=use_kernel,
-            dyn_scatter=dyn_scatter)
+            dyn_scatter=dyn_scatter, mesh=mesh, interpret=interpret)
     else:
         y, new_cache = attn_mod.decode_attention(
             params["attn"], hn, position, cache, cfg, window=window,

@@ -262,7 +262,7 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                 ep_axis: Optional[str] = None, mesh=None,
                 enc_out: Optional[jax.Array] = None, active=None,
                 use_kernel: Optional[bool] = None,
-                dyn_scatter: bool = False):
+                dyn_scatter: bool = False, interpret: bool = False):
     """tokens: (B,1) int32; position: (B,) absolute positions.
 
     Returns (logits (B,V) fp32, new_caches). ``active`` (B,) bool masks
@@ -284,7 +284,8 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                                     cfg, knobs, ep_axis=ep_axis, mesh=mesh,
                                     enc_out=enc_out, active=active,
                                     use_kernel=use_kernel,
-                                    dyn_scatter=dyn_scatter)
+                                    dyn_scatter=dyn_scatter,
+                                    interpret=interpret)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

@@ -141,6 +141,10 @@ class ServeEngine:
     paged: bool = False                # paged pool instead of dense rings
     page_size: int = 8
     n_pages: int = 0                   # 0 = auto (serve.pages.spec_for)
+    use_kernel: Optional[bool] = None  # paged-attention dispatch override
+                                       # (None = fused kernel on TPU only)
+    kernel_interpret: bool = False     # Pallas interpret mode (CPU CI of the
+                                       # sharded kernel path)
     max_prefill_exes: int = 16         # LRU bound on admission executables
     pack_window: int = 4               # pending requests scanned per step for
                                        # page-aware packing (bounds host work
@@ -164,9 +168,20 @@ class ServeEngine:
         self.pool: Optional[pages_mod.PagePool] = None
         self._page_spec = None
         self.stores: List[pages_mod.CacheStore] = []
+        # slot-affinity decode plan: decided ONCE from (cfg, mesh, slots)
+        # and honored by pool sizing, cache placement, and the traced step
+        self._decode_plan, self._plan_reason = None, "single device"
+        if self.paged and self.mesh is not None:
+            from repro.dist import sharding as dist_sharding
+            self._decode_plan, self._plan_reason = \
+                dist_sharding.paged_decode_plan(
+                    self.cfg, self.mesh, self.batch_slots, self.n_pages)
         if self.paged:
+            n_shards = (self._decode_plan.n_shards
+                        if self._decode_plan is not None else 1)
             self._page_spec = pages_mod.spec_for(
-                self.batch_slots, self.max_len, self.page_size, self.n_pages)
+                self.batch_slots, self.max_len, self.page_size, self.n_pages,
+                n_shards=n_shards)
             self.pool = pages_mod.PagePool(self._page_spec, self.batch_slots)
             # one store per cache kind behind the shared CacheStore protocol:
             # the page pool for attention state, the trivial per-slot store
@@ -191,16 +206,20 @@ class ServeEngine:
         # Engine-owned, never written into the (possibly shared) table —
         # executables are lowered against THIS engine's mesh/shardings.
         # Paged engines take the per-slot ``active`` write mask so decode
-        # can interleave with background admission (stall-free loop); under
-        # a mesh they force the gather path — the scalar-prefetch Pallas
-        # kernel does not partition under GSPMD
+        # can interleave with background admission (stall-free loop). Under
+        # a mesh the fused kernel runs shard_map'd over the slot-affinity
+        # pool when the decode plan allows; otherwise the attention layer
+        # takes the GSPMD gather path and logs why (attention.explain_
+        # dispatch reports the decision up front).
         # greedy paged engines fuse argmax into the decode executable: the
         # step returns (B,) token ids, so the host never pulls (B, V) logits
         self._fused_sample = bool(self.paged and self.temperature <= 0.0)
         if self.paged:
             mk = functools.partial(
                 step_mod.make_paged_serve_step,
-                use_kernel=False if self.mesh is not None else None,
+                mesh=self.mesh,
+                use_kernel=self.use_kernel,
+                interpret=self.kernel_interpret,
                 dynamic_scatter=self.mesh is None,
                 sample_greedy=self._fused_sample)
         else:
@@ -253,6 +272,29 @@ class ServeEngine:
             self._tenant = tenant_mod.ServeTenant(engine=self)
             self.runtime.bind(self._tenant)
             self._bound = True
+
+    # ----------------------------------------------------------- dispatch --
+
+    @property
+    def sharded_kernel(self) -> bool:
+        """True when this engine's decode executable runs the fused kernel
+        shard_map'd over the slot-affinity pool (the multi-device fast
+        path), False for single-device kernels and gather fallbacks."""
+        if not self.paged or self._decode_plan is None:
+            return False
+        if self.use_kernel is not None:
+            return bool(self.use_kernel)
+        from repro.kernels import ops as kops
+        return kops._on_tpu()
+
+    def explain_dispatch(self) -> str:
+        """One-line paged-decode dispatch description (startup banner)."""
+        from repro.models import attention as attn_mod
+        if not self.paged:
+            return "dense decode: ring caches (no paged dispatch)"
+        return attn_mod.explain_dispatch(
+            self.cfg, self.mesh, batch_slots=self.batch_slots,
+            n_pages=self._page_spec.n_pages, use_kernel=self.use_kernel)
 
     # ------------------------------------------------------------ variants --
 
@@ -508,20 +550,24 @@ class ServeEngine:
                 start += C
         return logits, caches
 
-    def _prefix_dedup_wait(self, req: Request) -> bool:
+    def _prefix_dedup_wait(self, req: Request, shard: int = 0) -> bool:
         """Cold-start prefix dedup: True when an in-flight admission is
         prefilling a page-aligned prefix this prompt shares and the index
         does not cover it yet. Admitting now would concurrently re-prefill
         (and re-allocate) pages the sibling is about to register — hold the
         request back until the registration lands. Steady state (prefix
         already indexed) never defers, so warm traces keep full admission
-        concurrency."""
+        concurrency. Only siblings on the SAME pool shard count: a prefix
+        registered on another shard's pages can never be mapped here (slot
+        affinity), so waiting on it would be pure latency."""
         P = self.page_size
         cap = min((len(req.prompt) - 1) // P, self.pool.max_register_pages)
         if cap <= 0 or not self._admissions:
             return False
         best = 0
         for adm in self._admissions.values():
+            if self.pool.slot_shard(adm.slot) != shard:
+                continue
             other = adm.req.prompt
             lim = min(len(req.prompt), len(other), cap * P)
             k = 0
@@ -530,8 +576,8 @@ class ServeEngine:
             best = max(best, (k // P) * P)
         if not best:
             return False
-        return self.pool.lookup_prefix(req.prompt,
-                                       self.active_knobs)[0] < best
+        return self.pool.lookup_prefix(req.prompt, self.active_knobs,
+                                       shard)[0] < best
 
     def _start_admissions(self, count_skips: bool = True) -> None:
         """Open a background admission on EVERY free slot (continuous
@@ -567,7 +613,7 @@ class ServeEngine:
                     self._page_spec.max_pages * self.page_size, \
                     "paged serving does not ring-wrap: need " \
                     "max_len >= prompt + max_new"
-                if self._prefix_dedup_wait(req):
+                if self._prefix_dedup_wait(req, self.pool.slot_shard(slot)):
                     continue       # sibling is mid-prefill of our prefix
                 # grouped/speculative allocation: reserve the decode pages
                 # up front (positions S .. S+max_new-2 are written) so the

@@ -36,6 +36,20 @@ mapping — allocation never happens inside a jitted step:
   entries whenever allocatable headroom drops below the low watermark —
   moving eviction churn off the admission path.
 
+* **Slot-affinity sharding (multi-device pools).** With ``n_shards`` > 1 the
+  physical page range splits into contiguous per-device shards (shard ``s``
+  owns pages ``[s * shard_pages, (s+1) * shard_pages)``, whose first page is
+  that shard's reserved null page) and every slot is pinned to the shard
+  ``slot * n_shards // batch_slots`` — the SAME contiguous split GSPMD uses
+  when the pool's page dim and the block table's slot dim are sharded over
+  the batch mesh axes. All of a slot's pages (private, prefix-shared, and
+  speculative alike) come from its own shard, so inside ``shard_map`` each
+  device resolves its slots' block tables entirely against local pages: the
+  fused decode kernel runs per-shard with zero collectives, and the
+  dynamic-index cache write becomes legal under the mesh. The prefix index
+  is shard-local too (keys are shard-tagged): sharing never migrates a page
+  across devices. ``n_shards=1`` reduces exactly to the layout above.
+
 * **Reclaimable budget (the ``pool_pages`` Pliant knob).** ``set_reclaimed``
   shrinks the allocatable-page limit in quanta; shrinking evicts prefix
   index entries (LRU) — the approximation-tolerant pages, in Pliant terms —
@@ -57,25 +71,34 @@ import numpy as np
 class PageSpec:
     """Static shape of a paged cache pool (the engine's cache-spec)."""
     page_size: int       # tokens per page
-    n_pages: int         # physical pages, INCLUDING the reserved null page 0
+    n_pages: int         # physical pages, INCLUDING the reserved null pages
     max_pages: int       # logical pages per slot (ceil(max_len / page_size))
+    n_shards: int = 1    # slot-affinity device shards (1 = unsharded pool)
 
     @property
     def usable(self) -> int:
-        return self.n_pages - 1
+        return self.n_pages - self.n_shards
+
+    @property
+    def shard_pages(self) -> int:
+        """Physical pages per shard (the first one is that shard's null)."""
+        return self.n_pages // self.n_shards
 
 
 def spec_for(batch_slots: int, max_len: int, page_size: int = 8,
-             n_pages: int = 0) -> PageSpec:
+             n_pages: int = 0, n_shards: int = 1) -> PageSpec:
     """Default pool sizing: every slot can hold a full ``max_len`` sequence,
-    plus one sequence's worth of slack for the prefix cache. ``n_pages`` is
-    rounded up to a multiple of 8 so the physical page dim stays shardable
-    (``dist.sharding.cache_shardings``)."""
+    plus one sequence's worth of slack per shard for the prefix cache.
+    ``n_pages`` is rounded up to a multiple of lcm(8, n_shards) so the
+    physical page dim stays shardable (``dist.sharding.cache_shardings``)
+    AND splits evenly into the slot-affinity shards."""
+    import math
     max_pages = -(-max_len // page_size)
     if n_pages <= 0:
-        n_pages = 1 + (batch_slots + 1) * max_pages
-    n_pages = -(-n_pages // 8) * 8
-    return PageSpec(page_size, n_pages, max_pages)
+        n_pages = n_shards + (batch_slots + n_shards) * max_pages
+    mult = 8 * n_shards // math.gcd(8, n_shards)
+    n_pages = -(-n_pages // mult) * mult
+    return PageSpec(page_size, n_pages, max_pages, n_shards)
 
 
 class CacheStore:
@@ -133,8 +156,14 @@ class PagePool(CacheStore):
         # snapshots an admission pauses for — prompts share at most this
         # many leading pages (stats["register_capped"] counts the overflow)
         self.max_register_pages = max_register_pages
-        self.free: collections.deque = collections.deque(
-            range(1, spec.n_pages))
+        assert spec.n_pages % spec.n_shards == 0, spec
+        assert batch_slots % spec.n_shards == 0, \
+            (batch_slots, spec.n_shards, "slot affinity needs an even split")
+        # per-shard free lists: page s*shard_pages is shard s's reserved null
+        self._free: List[collections.deque] = [
+            collections.deque(range(s * spec.shard_pages + 1,
+                                    (s + 1) * spec.shard_pages))
+            for s in range(spec.n_shards)]
         self.ref = np.zeros(spec.n_pages, np.int32)
         self.blocks = np.zeros((batch_slots, spec.max_pages), np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(batch_slots)]
@@ -154,8 +183,21 @@ class PagePool(CacheStore):
     # --------------------------------------------------------- accounting --
 
     @property
+    def free(self) -> List[int]:
+        """Flattened free list across shards (read-only audit view)."""
+        return [p for dq in self._free for p in dq]
+
+    def slot_shard(self, slot: int) -> int:
+        """The device shard that owns ``slot``'s pages: the contiguous split
+        GSPMD applies when the block table's slot dim is batch-sharded."""
+        return slot * self.spec.n_shards // self.batch_slots
+
+    def page_shard(self, pid: int) -> int:
+        return pid // self.spec.shard_pages
+
+    @property
     def used(self) -> int:
-        return self.spec.usable - len(self.free)
+        return self.spec.usable - sum(len(dq) for dq in self._free)
 
     @property
     def limit(self) -> int:
@@ -180,42 +222,47 @@ class PagePool(CacheStore):
         self._clock += 1
         return self._clock
 
-    def _alloc(self, *, for_live: bool = False) -> Optional[int]:
-        """Pop a free physical page (refcount 1). Evicts LRU prefix entries
-        under pressure. ``for_live`` allocations (decode growth of an
-        in-flight request) may exceed the reclaim limit — reclamation must
-        never corrupt a live request."""
+    def _alloc(self, shard: int = 0, *, for_live: bool = False
+               ) -> Optional[int]:
+        """Pop a free physical page of ``shard`` (refcount 1). Evicts LRU
+        prefix entries under pressure — any shard's entries relieve the
+        global reclaim budget, but only ``shard``'s entries can refill its
+        free list (pages never migrate). ``for_live`` allocations (decode
+        growth of an in-flight request) may exceed the reclaim limit —
+        reclamation must never corrupt a live request."""
         if not for_live:
             while self.used >= self.limit and self.index:
                 self._evict_lru()
             if self.used >= self.limit:
                 return None
-        while not self.free and self.index:
-            self._evict_lru()
-        if not self.free:
+        while not self._free[shard]:
+            if not self._evict_lru(shard):
+                break
+        if not self._free[shard]:
             return None
         if self.used >= self.limit:
             self.stats["over_limit_allocs"] += 1
-        pid = self.free.popleft()
+        pid = self._free[shard].popleft()
         self.ref[pid] = 1
         self.stats["allocs"] += 1
         self.stats["peak_used"] = max(self.stats["peak_used"], self.used)
         return pid
 
-    def _alloc_n(self, n: int, *, for_live: bool = False
+    def _alloc_n(self, n: int, shard: int = 0, *, for_live: bool = False
                  ) -> Optional[List[int]]:
-        """Allocate ``n`` pages as ONE all-or-nothing free-list transaction:
-        either all ``n`` come back (each refcount 1) or the free list and
-        refcounts are left exactly as found — partially-grabbed pages were
-        never written, so the rollback is an exact undo (no deref/scrub
-        bookkeeping). The grouped-allocation primitive ``admit`` builds on."""
+        """Allocate ``n`` pages of ``shard`` as ONE all-or-nothing free-list
+        transaction: either all ``n`` come back (each refcount 1) or the free
+        list and refcounts are left exactly as found — partially-grabbed
+        pages were never written, so the rollback is an exact undo (no
+        deref/scrub bookkeeping). The grouped-allocation primitive ``admit``
+        builds on."""
         got: List[int] = []
         for _ in range(n):
-            pid = self._alloc(for_live=for_live)
+            pid = self._alloc(shard, for_live=for_live)
             if pid is None:
                 for p in reversed(got):
                     self.ref[p] = 0
-                    self.free.appendleft(p)
+                    self._free[shard].appendleft(p)
                 self.stats["allocs"] -= len(got)
                 return None
             got.append(pid)
@@ -225,7 +272,7 @@ class PagePool(CacheStore):
         self.ref[pid] -= 1
         assert self.ref[pid] >= 0, pid
         if self.ref[pid] == 0:
-            self.free.append(pid)
+            self._free[self.page_shard(pid)].append(pid)
             self.scrub_pending.append(pid)
             self.stats["frees"] += 1
 
@@ -240,32 +287,35 @@ class PagePool(CacheStore):
     # ------------------------------------------------------- prefix index --
 
     def _chain_keys(self, prompt: Sequence[int], tag,
-                    n_pages: int) -> List[int]:
+                    n_pages: int, shard: int = 0) -> List[int]:
         """Chained per-page index keys: ``key_i = hash((key_{i-1}, page_i
         tokens))`` — O(1) index storage per boundary instead of the full
         token tuple (which made a 32k prompt cost O(S^2/P) key memory), the
         vLLM block-hash scheme. 64-bit collisions are accepted as
-        negligible."""
+        negligible. Keys are shard-tagged: a prefix registered on one shard
+        must never be mapped into a slot on another (its pages would not be
+        device-local there), so each shard keeps its own index namespace."""
         P = self.spec.page_size
-        keys, prev = [], hash((id(type(self)), tag))
+        keys, prev = [], hash((id(type(self)), tag, shard))
         for i in range(n_pages):
             prev = hash((prev,
                          tuple(int(t) for t in prompt[i * P:(i + 1) * P])))
             keys.append(prev)
         return keys
 
-    def lookup_prefix(self, prompt: Sequence[int], tag
+    def lookup_prefix(self, prompt: Sequence[int], tag, shard: int = 0
                       ) -> Tuple[int, Optional[PrefixEntry]]:
-        """Deepest registered full-page prefix of ``prompt`` under ``tag``,
-        capped at ``len(prompt) - 1`` tokens so admission always re-prefills
-        at least the last token (its logits seed sampling). Pure lookup:
-        hit/LRU bookkeeping happens in ``admit`` only when the admission
-        commits, so a blocked request retried every engine step does not
-        inflate the hit-rate metrics or refresh the entry's LRU clock."""
+        """Deepest registered full-page prefix of ``prompt`` under ``tag``
+        on ``shard``, capped at ``len(prompt) - 1`` tokens so admission
+        always re-prefills at least the last token (its logits seed
+        sampling). Pure lookup: hit/LRU bookkeeping happens in ``admit``
+        only when the admission commits, so a blocked request retried every
+        engine step does not inflate the hit-rate metrics or refresh the
+        entry's LRU clock."""
         P = self.spec.page_size
         n = min((len(prompt) - 1) // P, self.max_register_pages)
         best: Tuple[int, Optional[PrefixEntry]] = (0, None)
-        for i, key in enumerate(self._chain_keys(prompt, tag, n)):
+        for i, key in enumerate(self._chain_keys(prompt, tag, n, shard)):
             e = self.index.get(key)
             if e is not None:          # chains may have gaps (eviction/cap):
                 best = ((i + 1) * P, e)  # deepest present boundary wins
@@ -281,7 +331,8 @@ class PagePool(CacheStore):
         if n_tokens // P > self.max_register_pages:
             self.stats["register_capped"] += 1
             return
-        key = self._chain_keys(prompt, tag, n_tokens // P)[-1]
+        key = self._chain_keys(prompt, tag, n_tokens // P,
+                               self.slot_shard(slot))[-1]
         if key in self.index:
             return
         pages = tuple(int(p) for p in self.blocks[slot, : n_tokens // P])
@@ -292,11 +343,21 @@ class PagePool(CacheStore):
                                       last_use=self._tick())
         self.stats["prefix_registered"] += 1
 
-    def _evict_lru(self) -> None:
-        key = min(self.index, key=lambda k: self.index[k].last_use)
+    def _evict_lru(self, shard: Optional[int] = None) -> bool:
+        """Evict the LRU prefix entry (``shard`` filters to entries whose
+        pages live on that shard — an entry's pages are always
+        shard-homogeneous by construction). Returns False when no candidate
+        exists, so shard-local pressure loops terminate even while other
+        shards' entries populate the index."""
+        keys = [k for k, e in self.index.items()
+                if shard is None or self.page_shard(e.pages[0]) == shard]
+        if not keys:
+            return False
+        key = min(keys, key=lambda k: self.index[k].last_use)
         for p in self.index.pop(key).pages:
             self._deref(p)
         self.stats["prefix_evicted"] += 1
+        return True
 
     def flush_prefixes(self) -> None:
         """Drop every prefix entry (variant hot-swaps re-encode the pool in
@@ -325,14 +386,16 @@ class PagePool(CacheStore):
         P = self.spec.page_size
         assert not self.slot_pages[slot], f"slot {slot} not freed"
         assert len(prompt) <= self.spec.max_pages * P, (len(prompt), self.spec)
+        shard = self.slot_shard(slot)
         prompt_pages = -(-len(prompt) // P)
-        if prompt_pages > self.spec.usable:
+        if prompt_pages > self.spec.shard_pages - 1:
             # structurally impossible — retrying every step would spin the
             # engine through max_steps with the request silently unserved
             raise RuntimeError(
                 f"prompt needs {prompt_pages} pages but the pool has "
-                f"{self.spec.usable} usable; size n_pages up")
-        shared, entry = self.lookup_prefix(prompt, tag)
+                f"{self.spec.shard_pages - 1} usable on the slot's shard; "
+                "size n_pages up")
+        shared, entry = self.lookup_prefix(prompt, tag, shard)
         # feasibility gate BEFORE touching allocator state: a doomed attempt
         # must not evict prefix entries it cannot use. The engine's
         # page-aware packing retries several candidates per step while the
@@ -342,10 +405,17 @@ class PagePool(CacheStore):
         # evicting those both lowers ``used`` and refills the free list, so
         # the gate passing guarantees the allocation below succeeds.
         hit_pages = set(entry.pages) if entry is not None else set()
-        evictable = sum(1 for e in self.index.values() for p in e.pages
-                        if self.ref[p] == 1 and p not in hit_pages)
-        head = min(max(self.limit - self.used, 0) + evictable,
-                   len(self.free) + evictable)
+        evict_all = evict_shard = 0
+        for e in self.index.values():
+            for p in e.pages:
+                if self.ref[p] == 1 and p not in hit_pages:
+                    evict_all += 1
+                    if self.page_shard(p) == shard:
+                        evict_shard += 1
+        # budget headroom can be relieved by evicting ANY shard's entries;
+        # supply headroom only by this shard's free list + evictable pages
+        head = min(max(self.limit - self.used, 0) + evict_all,
+                   len(self._free[shard]) + evict_shard)
         want_full = min(max(-(-(len(prompt) + reserve_tokens) // P),
                             prompt_pages), self.spec.max_pages)
         n_total = next((c for c in dict.fromkeys([want_full, prompt_pages])
@@ -363,7 +433,7 @@ class PagePool(CacheStore):
             # while this admission is about to map them
             for p in entry.pages:
                 self.ref[p] += 1
-        fresh = self._alloc_n(n_new)
+        fresh = self._alloc_n(n_new, shard)
         if fresh is None:              # unreachable after the gate, kept as
             if shared:                 # a safety net for future drift
                 for p in entry.pages:
@@ -388,7 +458,7 @@ class PagePool(CacheStore):
         # only the first k pages must still hit (the target workload is
         # shared prefix + divergent tails)
         top = min(len(prompt) // P, self.max_register_pages) * P
-        keys = self._chain_keys(prompt, tag, top // P)
+        keys = self._chain_keys(prompt, tag, top // P, shard)
         reg = [b for b in range(shared + P, top + 1, P)
                if keys[b // P - 1] not in self.index]
         if len(prompt) // P > self.max_register_pages:
@@ -412,7 +482,7 @@ class PagePool(CacheStore):
                 f"ring-wrap — size max_len >= prompt + max_new")
         if self.blocks[slot, lp] != 0:
             return False
-        pid = self._alloc(for_live=True)
+        pid = self._alloc(self.slot_shard(slot), for_live=True)
         if pid is None:
             raise RuntimeError("page pool exhausted mid-decode "
                                f"(used={self.used}/{self.spec.usable})")
@@ -465,16 +535,21 @@ class PagePool(CacheStore):
             low = max(1, self.spec.usable // 8)
         if high is None:
             high = min(2 * low, self.spec.usable)
+        # per-shard watermarks: headroom on one shard cannot serve another's
+        # admissions, so each shard keeps its own share of the reservation
+        # (ceil split keeps n_shards=1 behavior identical)
+        ns = self.spec.n_shards
+        lo, hi = -(-low // ns), -(-high // ns)
 
-        def headroom() -> int:
-            return min(len(self.free), max(self.limit - self.used, 0))
+        def headroom(s: int) -> int:
+            return min(len(self._free[s]), max(self.limit - self.used, 0))
 
-        if headroom() >= low:
-            return 0
         evicted = 0
-        while headroom() < high and self.index:
-            self._evict_lru()
-            evicted += 1
+        for s in range(ns):
+            if headroom(s) >= lo:
+                continue
+            while headroom(s) < hi and self._evict_lru(s):
+                evicted += 1
         self.stats["replenish_evictions"] += evicted
         return evicted
 
@@ -489,10 +564,20 @@ class PagePool(CacheStore):
             want.update(pages)
         for e in self.index.values():
             want.update(e.pages)
-        free = set(self.free)
-        assert len(free) == len(self.free), "free list holds duplicates"
-        assert 0 not in free, "null page on the free list"
-        for pid in range(1, self.spec.n_pages):
+        flat = self.free
+        free = set(flat)
+        nulls = {s * self.spec.shard_pages for s in range(self.spec.n_shards)}
+        assert len(free) == len(flat), "free list holds duplicates"
+        assert not (nulls & free), "null page on a free list"
+        for s, dq in enumerate(self._free):
+            for p in dq:
+                assert self.page_shard(p) == s, \
+                    (p, s, "free page on the wrong shard's list")
+        for pid in range(self.spec.n_pages):
+            if pid in nulls:
+                assert self.ref[pid] == 0 and want[pid] == 0, \
+                    (pid, "null page allocated or mapped")
+                continue
             if pid in free:
                 assert self.ref[pid] == 0 and want[pid] == 0, \
                     (pid, int(self.ref[pid]), want[pid])
@@ -503,6 +588,14 @@ class PagePool(CacheStore):
             mapped = sorted(int(p) for p in self.blocks[slot] if p != 0)
             assert mapped == sorted(self.slot_pages[slot]), \
                 (slot, mapped, self.slot_pages[slot])
+            # slot affinity: every page a slot maps lives on its own shard,
+            # so inside shard_map the block row resolves device-locally
+            for p in self.slot_pages[slot]:
+                assert self.page_shard(p) == self.slot_shard(slot), \
+                    (slot, p, "page mapped across shards")
+        for e in self.index.values():
+            shards = {self.page_shard(p) for p in e.pages}
+            assert len(shards) == 1, (e.pages, "prefix entry spans shards")
 
     # ------------------------------------------------------------ reclaim --
 

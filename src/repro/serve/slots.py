@@ -52,6 +52,11 @@ def convert_caches(caches, kv_quant: bool, dtype=jnp.float32):
     convert every physical page in place (shared prefix pages included, so
     all sharers stay consistent); the engine flushes the knob-tagged prefix
     index on a swap since re-encoded pages match no registered tag.
+
+    The conversion is elementwise per physical page, so under a slot-affinity
+    sharded pool (DESIGN.md §13) it is layout-preserving: GSPMD keeps every
+    page on its owning device and a hot-swap never migrates pages across
+    shards — no re-planning needed around a variant switch.
     """
     q = quantize_kv
     dq = lambda x: dequantize_kv(x, dtype)

@@ -5,9 +5,10 @@ shardings (passed through ``jax.tree.map`` structurally), so optimizer state
 is FSDP/TP-sharded exactly like the weights.
 
 ``adamw_update`` takes an optional ``grad_reduce`` hook applied to the raw
-gradients before clipping — the seam where ``repro.dist.collectives`` plugs in
-the int8-compressed cross-pod reduction (the ``grad_compress`` knob) without
-the optimizer knowing about meshes.
+gradients before clipping — the seam where ``repro.dist.collectives`` plugs
+in the owned gradient-sync region (``grad_sync``): the explicit in-pod pmean
+plus, when the knobs call for it, the int8-compressed cross-pod wire (the
+``grad_compress`` knob) — without the optimizer knowing about meshes.
 """
 from __future__ import annotations
 

@@ -24,19 +24,35 @@ from repro.train import optim
 
 
 def grad_reduce_for(knobs: ApproxKnobs, mesh, pspecs=None):
-    """The cross-pod gradient collective an (knobs, mesh) pair calls for.
+    """The owned gradient-sync region an (knobs, mesh) pair calls for.
 
-    * no pod axis / single device  -> None (GSPMD's implicit reduction only)
-    * ``sync_period > 1``          -> None: per-step pod sync is ELIDED; the
-      launcher runs ``pod_sync`` every k steps instead (local-SGD style).
-    * ``grad_compress == "int8"``  -> int8-wire compressed pod mean each step.
+    Returns a tree -> tree callable wrapping ONE shard_map region
+    (``collectives.grad_sync``), or None when there is nothing to own:
+
+    * single device / mesh without data or pod axes -> None.
+    * ``data`` axis present -> explicit in-pod pmean over ``data`` (idempotent
+      on GSPMD's implicit reduction, but now trace-visible and priceable).
+    * ``pod`` axis present and ``sync_period == 1`` -> the cross-pod mean
+      rides in the same region, int8-wire when ``grad_compress == "int8"``.
+    * ``sync_period > 1`` -> the pod collective is ELIDED AT TRACE TIME: the
+      compiled step carries zero pod wire bytes; the launcher runs
+      ``pod_sync`` every k steps instead (local-SGD style).
+
+    The returned callable exposes ``.pod_wire`` / ``.compress`` for
+    introspection (tests, dry-run accounting).
     """
-    if mesh is None or "pod" not in getattr(mesh, "shape", {}):
+    shape = getattr(mesh, "shape", {}) if mesh is not None else {}
+    if "data" not in shape and "pod" not in shape:
         return None
-    if knobs.sync_period > 1 or knobs.grad_compress != "int8":
-        return None
-    return lambda g: collectives.pod_sync_params(g, mesh, compress=True,
-                                                 pspecs=pspecs)
+    pod_wire = "pod" in shape and knobs.sync_period == 1
+    compress = knobs.grad_compress == "int8"
+
+    def reduce_fn(g):
+        return collectives.grad_sync(g, mesh, pod_wire=pod_wire,
+                                     compress=compress, pspecs=pspecs)
+    reduce_fn.pod_wire = pod_wire
+    reduce_fn.compress = compress
+    return reduce_fn
 
 
 _POD_SYNC_CACHE = {}
@@ -142,18 +158,23 @@ def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                           ep_axis: Optional[str] = None, mesh=None,
                           use_kernel: Optional[bool] = None,
                           dynamic_scatter: bool = False,
-                          sample_greedy: bool = False):
+                          sample_greedy: bool = False,
+                          interpret: bool = False):
     """Returns step(params, tokens, position, active, caches)
     -> (logits_or_tokens, new_caches) — the paged engine's decode cell.
 
     ``active`` (B,) bool masks per-slot cache writes so decode steps can
     interleave with a background admission: the admitting slot's mapped
     pages / SSM rows must not receive garbage from its dead batch row.
-    ``use_kernel`` overrides the fused-kernel dispatch: sharded engines
-    pass False — the scalar-prefetch Pallas kernel does not partition
-    under GSPMD, the gather path is the multi-device story.
+    ``use_kernel`` overrides the fused-kernel dispatch; under a ``mesh``
+    the kernel runs shard_map'd over the slot-affinity pool layout when
+    ``dist.sharding.paged_decode_plan`` allows, else the GSPMD gather path
+    (with a logged warning). ``interpret`` runs the sharded kernel in
+    Pallas interpret mode (simulated-device CI).
     ``dynamic_scatter`` selects the O(1)-per-entry dynamic cache write
-    (single-device pools only — see ``attention.paged_decode_attention``).
+    (single-device pools only — the sharded kernel path does its own
+    dynamic write inside the shard; see
+    ``attention.paged_decode_attention``).
     ``sample_greedy`` fuses argmax into the executable and returns (B,)
     int32 tokens instead of (B, V) logits: the greedy engine then moves
     B*4 bytes per step off-device instead of the full logits matrix."""
@@ -164,7 +185,8 @@ def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
         logits, caches = decode(params, tokens, position, caches, knobs=knobs,
                                 ep_axis=ep_axis, mesh=mesh, active=active,
                                 use_kernel=use_kernel,
-                                dyn_scatter=dynamic_scatter)
+                                dyn_scatter=dynamic_scatter,
+                                interpret=interpret)
         if sample_greedy:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
         return logits, caches

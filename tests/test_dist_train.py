@@ -17,15 +17,22 @@ class _FakeMesh:
 def test_grad_reduce_selection():
     pod = _FakeMesh({"pod": 2, "data": 4})
     podless = _FakeMesh({"data": 2, "model": 4})
+    tp_only = _FakeMesh({"model": 4})
     assert step_mod.grad_reduce_for(PRECISE, None) is None
-    assert step_mod.grad_reduce_for(PRECISE, pod) is None
-    assert step_mod.grad_reduce_for(
-        ApproxKnobs(grad_compress="int8"), podless) is None
-    assert step_mod.grad_reduce_for(
-        ApproxKnobs(grad_compress="int8"), pod) is not None
-    # sync elision: per-step pod collective dropped, launcher syncs instead
-    assert step_mod.grad_reduce_for(
-        ApproxKnobs(grad_compress="int8", sync_period=4), pod) is None
+    assert step_mod.grad_reduce_for(PRECISE, tp_only) is None
+    # any data/pod mesh gets the owned in-pod region; the pod wire and its
+    # compression are per-knob facts exposed on the callable
+    r = step_mod.grad_reduce_for(PRECISE, pod)
+    assert r is not None and r.pod_wire and not r.compress
+    r = step_mod.grad_reduce_for(ApproxKnobs(grad_compress="int8"), podless)
+    assert r is not None and not r.pod_wire and r.compress
+    r = step_mod.grad_reduce_for(ApproxKnobs(grad_compress="int8"), pod)
+    assert r.pod_wire and r.compress
+    # sync elision: the pod collective is dropped from the region at trace
+    # time, launcher syncs instead; the in-pod pmean region remains
+    r = step_mod.grad_reduce_for(
+        ApproxKnobs(grad_compress="int8", sync_period=4), pod)
+    assert r is not None and not r.pod_wire
 
 
 def test_pod_sync_noop_without_pod_axis():
@@ -72,6 +79,17 @@ for a, b in zip(jax.tree.leaves(p_c), jax.tree.leaves(synced)):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 synced2 = step_mod.pod_sync(synced, mesh)
 assert len(step_mod._POD_SYNC_CACHE) == 1
+
+# trace-time elision: under sync_period>1 the gradient-sync region carries
+# NO pod collective in its jaxpr (only the in-pod data pmean); under
+# sync_period==1 the pod wire is traced into the same region
+grads = jax.tree.map(jnp.zeros_like, params)
+r1 = step_mod.grad_reduce_for(knobs, mesh)
+r4 = step_mod.grad_reduce_for(
+    ApproxKnobs(grad_compress="int8", sync_period=4), mesh)
+j1, j4 = str(jax.make_jaxpr(r1)(grads)), str(jax.make_jaxpr(r4)(grads))
+assert "('pod',)" in j1 and "('data',)" in j1
+assert "('pod',)" not in j4 and "('data',)" in j4
 print("GRAD_COMPRESS_OK")
 """, devices=8)
     assert "GRAD_COMPRESS_OK" in out

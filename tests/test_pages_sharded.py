@@ -1,0 +1,154 @@
+"""Slot-affinity invariants of the sharded page pool: under ANY interleaving
+of admissions, frees, window releases, reclaims, and replenish churn, every
+slot's pages stay on its owning shard and no page ever migrates — the
+host-side contract the shard_map'd fused decode kernel compiles against
+(``models.attention._sharded_write_attend`` rebases block tables assuming
+device-local pages)."""
+import pytest
+
+from repro.serve.pages import PagePool, spec_for
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+SLOTS, MAX_LEN, PSIZE, NSH = 8, 32, 4, 4
+
+
+def mk_pool(n_shards=NSH, slots=SLOTS, n_pages=0):
+    spec = spec_for(slots, MAX_LEN, page_size=PSIZE, n_pages=n_pages,
+                    n_shards=n_shards)
+    return PagePool(spec, slots)
+
+
+def check_affinity(pool):
+    """assert_consistent plus the explicit cross-shard-migration audit."""
+    pool.assert_consistent()
+    for slot, pages in enumerate(pool.slot_pages):
+        for p in pages:
+            assert pool.page_shard(p) == pool.slot_shard(slot)
+    for s, dq in enumerate(pool._free):
+        assert all(pool.page_shard(p) == s for p in dq)
+    for e in pool.index.values():
+        assert len({pool.page_shard(p) for p in e.pages}) == 1
+
+
+def test_spec_sizing_divides_shards():
+    spec = mk_pool().spec
+    assert spec.n_pages % NSH == 0
+    assert spec.usable == spec.n_pages - NSH
+    # one null sentinel per shard, never allocatable
+    pool = mk_pool()
+    nulls = {s * spec.shard_pages for s in range(NSH)}
+    assert not nulls & set(pool.free)
+
+
+def test_admit_places_pages_on_owning_shard():
+    pool = mk_pool()
+    for slot in range(SLOTS):
+        plan = pool.admit(slot, list(range(10 + slot)), "tag")
+        assert plan is not None
+        shard = pool.slot_shard(slot)
+        assert all(pool.page_shard(p) == shard
+                   for p in pool.slot_pages[slot])
+    check_affinity(pool)
+
+
+def test_free_returns_pages_to_owning_shard():
+    pool = mk_pool()
+    for slot in range(SLOTS):
+        assert pool.admit(slot, list(range(12)), slot) is not None
+    before = [len(dq) for dq in pool._free]
+    for slot in range(SLOTS):
+        pool.free_slot(slot)
+    pool.flush_prefixes()
+    check_affinity(pool)
+    after = [len(dq) for dq in pool._free]
+    # every shard got exactly its own slots' pages back
+    assert after == [b + 3 * (SLOTS // NSH) for b in before]
+
+
+def test_decode_growth_stays_on_shard():
+    pool = mk_pool()
+    for slot in range(SLOTS):
+        assert pool.admit(slot, list(range(6)), "t") is not None
+        for pos in range(6, 6 + 3 * PSIZE):
+            pool.ensure_decode_page(slot, pos)
+        check_affinity(pool)
+
+
+def test_release_window_and_replenish_never_migrate():
+    pool = mk_pool()
+    for slot in range(SLOTS):
+        assert pool.admit(slot, list(range(16)), slot % 2) is not None
+    owner = {p: pool.page_shard(p)
+             for pages in pool.slot_pages for p in pages}
+    for slot in range(SLOTS):
+        pool.release_window_pages(slot, min_pos=2 * PSIZE - 1)
+        check_affinity(pool)
+    pool.replenish(low=pool.spec.usable, high=pool.spec.usable)
+    check_affinity(pool)
+    # page->shard is a static function of the id: nothing can have moved
+    for p, s in owner.items():
+        assert pool.page_shard(p) == s
+
+
+def test_pressure_evicts_only_on_the_starved_shard():
+    # small pool: 12 pages per shard (1 null + 11 usable)
+    pool = mk_pool(n_pages=48)
+    # pin prefix entries on every shard, then free the slots (index-only)
+    for slot in range(SLOTS):
+        plan = pool.admit(slot, list(range(8)), slot)
+        for b in plan.register:
+            pool.register_prefix(slot, list(range(8)), slot, b)
+        pool.free_slot(slot)
+    assert len(pool.index) >= NSH
+    per_shard = lambda: [sum(1 for e in pool.index.values()
+                             if pool.page_shard(e.pages[0]) == s)
+                         for s in range(NSH)]
+    before = per_shard()
+    # a full-length admission on a shard-0 slot overruns its 7 free pages:
+    # the supply loop must evict shard 0's own prefix entries, nobody else's
+    shard0_slots = [s for s in range(SLOTS) if pool.slot_shard(s) == 0]
+    assert pool.admit(shard0_slots[0], list(range(MAX_LEN)), "fat") is not None
+    check_affinity(pool)
+    after = per_shard()
+    assert after[0] < before[0]
+    assert after[1:] == before[1:]
+
+
+def test_single_shard_pool_unchanged():
+    # n_shards=1 keeps the legacy single-free-list behavior byte-identical
+    pool = mk_pool(n_shards=1)
+    assert pool.spec.shard_pages == pool.spec.n_pages
+    assert all(pool.slot_shard(s) == 0 for s in range(SLOTS))
+    assert pool.admit(0, list(range(10)), "t") is not None
+    check_affinity(pool)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, SLOTS - 1),
+                          st.integers(1, MAX_LEN - 2 * PSIZE),
+                          st.integers(0, 2)),
+                min_size=1, max_size=40))
+def test_any_interleaving_keeps_slot_affinity(ops):
+    """admit/decode/free/release/reclaim/replenish in any order: the pool
+    stays consistent and no slot ever maps a page off its shard."""
+    pool = mk_pool()
+    pos = [0] * SLOTS
+    for op, slot, length, tag in ops:
+        if op == 0 and not pool.slot_pages[slot]:                  # admit
+            if pool.admit(slot, list(range(length)), tag) is not None:
+                pos[slot] = length
+        elif op == 1 and pool.slot_pages[slot]:                    # decode
+            for p in range(pos[slot],
+                           min(pos[slot] + PSIZE + 1, MAX_LEN)):
+                pool.ensure_decode_page(slot, p)
+            pos[slot] = min(pos[slot] + PSIZE + 1, MAX_LEN)
+        elif op == 2:                                              # free
+            pool.free_slot(slot)
+        elif op == 3 and pool.slot_pages[slot]:                    # window
+            pool.release_window_pages(slot, min_pos=length - 1)
+        elif op == 4:                                              # reclaim
+            pool.set_reclaimed(tag)
+        elif op == 5:                                              # bg churn
+            pool.replenish()
+        check_affinity(pool)
