@@ -81,6 +81,7 @@ def main(rows: Rows):
 
     paged_decode_rows(rows)
     sharded_decode_rows(rows)
+    prefill_rows(rows)
     return rows
 
 
@@ -348,6 +349,141 @@ def sharded_decode_rows(rows: Rows):
     return rows
 
 
+# ------------------------------------------------------- ring prefill rows --
+# The sequence-parallel admission path: kernels.ring_attention shard_map'd
+# over the prefill plan's ring vs the unsharded masked-softmax oracle, on 8
+# simulated devices (subprocess — device count is fixed at jax import). The
+# parent also stamps the 32k-target per-device cost model the explorer
+# prices admission with; CI asserts per-device work scales ~1/n_shards.
+
+_PRE_B, _PRE_C, _PRE_CACHE = 1, 64, 192
+_PRE_G, _PRE_R, _PRE_HD = 2, 2, 32
+_PRE_NSH = 4
+
+
+def _prefill_case(quantized=False, seed=0):
+    """One admission chunk (positions cache..cache+C) over its full visible
+    context [cache; chunk] with a hole punched in the cache positions —
+    exercises the -1-position masking the paged gather path produces."""
+    B, C, G, R, hd = _PRE_B, _PRE_C, _PRE_G, _PRE_R, _PRE_HD
+    L = _PRE_CACHE + C
+    rng = np.random.default_rng(seed)
+    if quantized:
+        k = rng.integers(-127, 128, (B, L, G, hd)).astype(np.int8)
+        v = rng.integers(-127, 128, (B, L, G, hd)).astype(np.int8)
+    else:
+        k = (rng.normal(size=(B, L, G, hd)) * 0.3).astype(np.float32)
+        v = rng.normal(size=(B, L, G, hd)).astype(np.float32)
+    q = (rng.normal(size=(B, C, G, R, hd)) * 0.3).astype(np.float32)
+    q_pos = np.broadcast_to(np.arange(_PRE_CACHE, L, dtype=np.int32),
+                            (B, C)).copy()
+    kv_pos = np.broadcast_to(np.arange(L, dtype=np.int32), (B, L)).copy()
+    kv_pos[:, 7:11] = -1                     # unmapped hole in the cache
+    return tuple(jnp.asarray(a) for a in (q, k, v, q_pos, kv_pos))
+
+
+def _prefill_ref(q, k, v, qp, kvp, *, window=0, cap=0.0, kv_scale=0.0):
+    """Unsharded oracle: one masked softmax over the whole context with the
+    same explicit-position mask the ring kernel applies."""
+    dq = (lambda a: a.astype(jnp.float32) * kv_scale) if kv_scale else \
+        (lambda a: a.astype(jnp.float32))
+    k, v = dq(k), dq(v)
+    hd = q.shape[-1]
+    s = jnp.einsum("bcgrd,blgd->bgrcl", q.astype(jnp.float32),
+                   k) * hd ** -0.5
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qe = qp[:, None, None, :, None]
+    ke = kvp[:, None, None, None, :]
+    mask = (ke >= 0) & (qe >= 0) & (ke <= qe)
+    if window:
+        mask &= ke > qe - window
+    p = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    return jnp.einsum("bgrcl,blgd->bcgrd", p, v).astype(q.dtype)
+
+
+def _prefill_child():
+    """Runs under XLA_FLAGS=--xla_force_host_platform_device_count=8; prints
+    one PREFILL_JSON line the parent merges into BENCH_kernels.json."""
+    from repro.dist.sharding import PrefillPlan
+    from repro.kernels.ring_attention import ring_chunk_attention
+    from repro.launch.mesh import make_mesh
+
+    assert jax.device_count() >= 8, jax.device_count()
+    nsh = _PRE_NSH
+    mesh = make_mesh((nsh, 2), ("data", "model"))
+    plan = PrefillPlan("data", nsh, "model")
+    out = {"mesh": {"data": nsh, "model": 2}, "n_shards": nsh,
+           "chunk_len": _PRE_C, "kv_len": _PRE_CACHE + _PRE_C}
+    variants = [("fp32", dict(), dict()),
+                ("int8", dict(kv_scale=0.05), dict(quantized=True)),
+                ("windowed", dict(window=32), dict())]
+    for name, kw, mk in variants:
+        q, k, v, qp, kvp = _prefill_case(**mk)
+        rf = jax.jit(functools.partial(_prefill_ref, **kw))
+        t_u, o_u = timed(lambda: jax.block_until_ready(rf(q, k, v, qp, kvp)))
+        ring = jax.jit(functools.partial(ring_chunk_attention, mesh=mesh,
+                                         plan=plan, interpret=True, **kw))
+        t_r, o_r = timed(lambda: jax.block_until_ready(
+            ring(q, k, v, qp, kvp)))
+        err = float(jnp.max(jnp.abs(o_r - o_u)))
+        out[name] = {"unsharded_us": t_u * 1e6, "ring_us": t_r * 1e6,
+                     "max_err": err}
+    print("PREFILL_JSON:" + json.dumps(out))
+
+
+def prefill_rows(rows: Rows):
+    """Spawn the 8-device ring-prefill child, merge its parity account plus
+    the 32k-per-device cost model under ``prefill`` in BENCH_kernels.json."""
+    from repro.kernels.ring_attention import (
+        prefill_attn_flops, prefill_hbm_bytes, sharded_prefill_attn_flops,
+        sharded_prefill_hbm_bytes)
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernel_bench", "--prefill-child"],
+        capture_output=True, text=True, env=env)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith("PREFILL_JSON:")), None)
+    assert line is not None, (proc.stdout, proc.stderr[-2000:])
+    prefill = json.loads(line[len("PREFILL_JSON:"):])
+    # the 32k target shape the ISSUE's admission cell is sized for: 2k
+    # chunks over a 32k context, 16 heads of 128 at 8-way GQA
+    C32, L32, H32, G32, HD32 = 2048, 32768, 16, 8, 128
+    nsh = prefill["n_shards"]
+    prefill["flops_32k"] = {
+        "total": prefill_attn_flops(C32, L32, H32, HD32),
+        "per_device": sharded_prefill_attn_flops(C32, L32, H32, HD32,
+                                                 n_shards=nsh),
+    }
+    for tag, kv_b in (("", 4), ("_int8", 1)):
+        prefill[f"bytes_32k{tag}"] = {
+            "total": prefill_hbm_bytes(C32, L32, G32, HD32, n_heads=H32,
+                                       kv_bytes=kv_b),
+            "per_device": sharded_prefill_hbm_bytes(
+                C32, L32, G32, HD32, n_shards=nsh, n_heads=H32,
+                kv_bytes=kv_b),
+        }
+    path = RESULTS_DIR / "BENCH_kernels.json"
+    out = json.loads(path.read_text())
+    out["prefill"] = prefill
+    path.write_text(json.dumps(out, indent=1))
+    for name in ("fp32", "int8", "windowed"):
+        s = prefill[name]
+        rows.add(f"kernel.ring_prefill.{name}.unsharded", s["unsharded_us"],
+                 "jnp masked-softmax oracle")
+        rows.add(f"kernel.ring_prefill.{name}.ring", s["ring_us"],
+                 f"shard_map x{nsh};interpret;max_err={s['max_err']:.2e}")
+    for key in ("flops_32k", "bytes_32k", "bytes_32k_int8"):
+        w = prefill[key]
+        rows.add(f"kernel.ring_prefill.{key}.per_device", w["per_device"],
+                 f"total={w['total']:.3g};"
+                 f"scaling=x{w['total'] / w['per_device']:.2f}/{nsh}")
+    return rows
+
+
 if __name__ == "__main__":
     if "--sharded-child" in sys.argv:
         _sharded_child()
+    elif "--prefill-child" in sys.argv:
+        _prefill_child()

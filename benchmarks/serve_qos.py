@@ -6,6 +6,9 @@ prefix-cache hit rate, pool reclaim events) — the serve-side perf trajectory
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -164,5 +167,58 @@ def main(rows: Rows):
              f"paged={comparison['paged']['tok_s']:.1f};"
              f"qw_dense_ms={comparison['dense']['queue_wait_p95_ms']:.1f};"
              f"qw_paged_ms={comparison['paged']['queue_wait_p95_ms']:.1f}")
+    # admission compute per mesh shape: single-device whole-chunk cell vs
+    # the ring-sequence-parallel cell on 8 simulated devices (subprocess —
+    # device count is fixed at jax import). CI tracks admit_compute_p95
+    # and the dispatch string per shape.
+    admission = {"1x1": {
+        "mesh_shape": None,
+        "prefill_dispatch": eng.explain_prefill_dispatch(),
+        "admit_compute_p95_ms": comparison["paged"]["admit_compute_p95_ms"],
+    }}
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run([sys.executable, "-c", _ADMIT_CHILD],
+                          capture_output=True, text=True, env=env)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith("ADMIT_JSON:")), None)
+    assert line is not None, (proc.stdout, proc.stderr[-2000:])
+    admission["2x4"] = json.loads(line[len("ADMIT_JSON:"):])
+    out["admission"] = admission
+    for shape, st in admission.items():
+        rows.add(f"serve.admission.{shape}", st["admit_compute_p95_ms"],
+                 st["prefill_dispatch"])
     (RESULTS_DIR / "BENCH_serve.json").write_text(json.dumps(out, indent=1))
     return rows
+
+
+# one tiny sharded trace on 8 simulated host devices: the ring-prefill
+# admission cell end to end through the paged engine (interpret-mode kernels)
+_ADMIT_CHILD = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine
+cfg = get_config("gemma2-27b-smoke")
+params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+mesh = make_mesh((2, 4), ("data", "model"))
+eng = ServeEngine(cfg, batch_slots=4, max_len=32, params=params, mesh=mesh,
+                  paged=True, page_size=4, prefill_chunk=8,
+                  use_kernel=True, kernel_interpret=True)
+rng = np.random.default_rng(0)
+reqs = [Request(i, prompt=list(rng.integers(1, cfg.vocab_size, 6)),
+                max_new=4) for i in range(4)]
+for r in reqs:
+    r.t_arrival = time.perf_counter()
+    eng.submit(r)
+eng.run()
+ac = [r.admit_compute_s for r in reqs if r.t_admit]
+out = {"mesh_shape": dict(eng.mesh.shape),
+       "prefill_dispatch": eng.explain_prefill_dispatch(),
+       "admit_compute_p95_ms": (1e3 * float(np.percentile(ac, 95))
+                                if ac else 0.0)}
+print("ADMIT_JSON:" + json.dumps(out))
+"""

@@ -243,6 +243,40 @@ def analytic_cost(cfg: ModelConfig, shape, k: ApproxKnobs,
     return t / max(t_prec, 1e-30), pressure
 
 
+def admission_cost(cfg: ModelConfig, mesh, chunk_len: int, kv_len: int, *,
+                   use_kernel: Optional[bool] = None,
+                   kv_quant: bool = False) -> dict:
+    """Per-device price of one admission chunk's attention, laid out exactly
+    as the traced cell will run it.
+
+    Derives the ring layout from ``dist.sharding.prefill_plan`` — the same
+    pure function the serving engine and the chunk cells dispatch on, so the
+    priced shard count can never drift from the compiled one — and prices
+    the per-device FLOPs/HBM bytes with ``roofline.admission_terms``. This
+    is what the arbiter's admission-axis pressure attribution should read on
+    a mesh: the ring divides the dominant O(chunk x context) attention work
+    ``n_shards`` ways. Returns the terms dict plus ``n_shards`` and the
+    plan/fallback ``reason`` ("" = ring dispatched)."""
+    from repro import roofline
+    from repro.dist.sharding import prefill_plan
+    from repro.kernels import ops as kops
+    n, reason = 1, "no mesh (single device)"
+    if mesh is not None:
+        if use_kernel is None:
+            use_kernel = kops._on_tpu()
+        if not use_kernel:
+            reason = "kernel off: not on TPU"
+        else:
+            plan, reason = prefill_plan(cfg, mesh, chunk_len)
+            if plan is not None:
+                n = plan.n_shards
+    out = roofline.admission_terms(cfg, chunk_len, kv_len, n_shards=n,
+                                   kv_quant=kv_quant)
+    out["n_shards"] = n
+    out["reason"] = reason
+    return out
+
+
 # ------------------------------------------------------- pareto pruning --
 
 def pareto_front(points: Sequence[Tuple[float, float]]) -> List[int]:

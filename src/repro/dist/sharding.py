@@ -167,6 +167,61 @@ def paged_decode_plan(cfg: ModelConfig, mesh, batch_slots: int,
     return PagedDecodePlan(b, n, g_ax), ""
 
 
+# ------------------------------------------------------- ring prefill plan --
+
+class PrefillPlan:
+    """Sequence layout of the ring-attention chunked-prefill cell: the single
+    mesh axis the chunk's query dim (and the rotating K/V context) splits
+    over, the resulting shard count, and the mesh axis (if any) the kv_heads
+    dim additionally splits over.
+
+    Like ``PagedDecodePlan``, the plan is a pure function of
+    ``(cfg, mesh, chunk_len)`` so the prefill cell (shard_map specs + ring
+    schedule), the admission-step builders, and the explorer's compile-time
+    pricing all derive the SAME sequence layout independently — no side
+    channel between them. Causal chunks are laid out *striped* (round-robin
+    query rows per shard) for ring load balance; window chunks stay
+    contiguous so whole hops outside the band can be skipped — that choice
+    is per attention call, not part of the plan."""
+
+    def __init__(self, seq_axis: str, n_shards: int, kv_head_axis):
+        self.seq_axis = seq_axis          # single mesh axis name
+        self.n_shards = n_shards
+        self.kv_head_axis = kv_head_axis  # "model" or None (replicated)
+
+    def __repr__(self):
+        return (f"PrefillPlan(seq_axis={self.seq_axis!r}, "
+                f"n_shards={self.n_shards}, "
+                f"kv_head_axis={self.kv_head_axis!r})")
+
+
+def prefill_plan(cfg: ModelConfig, mesh, chunk_len: int):
+    """(plan, reason) for sequence-sharding one admission chunk's attention.
+
+    Returns ``(PrefillPlan, "")`` when a batch-side mesh axis can carry the
+    ring — a single axis from ("pod", "data") with size > 1 that does not
+    exceed the chunk length (each shard needs at least one resident query
+    row) — else ``(None, reason)`` and the caller takes the loud GSPMD
+    unsharded path. A single axis keeps the ``ppermute`` ring schedule
+    trivial; the largest eligible axis wins. kv_heads additionally split
+    over ``model`` when divisible, mirroring the decode plan."""
+    if mesh is None:
+        return None, "no mesh (single device)"
+    cand = [a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1]
+    if not cand:
+        return None, ("no batch mesh axis (pod/data) with size > 1 to carry "
+                      "the sequence ring")
+    cand = [a for a in cand if mesh.shape[a] <= chunk_len]
+    if not cand:
+        return None, (f"chunk_len={chunk_len} shorter than every batch mesh "
+                      "axis — no resident query row per shard")
+    ax = max(cand, key=lambda a: mesh.shape[a])
+    g_ax = ("model" if ("model" in mesh.shape
+                        and cfg.n_kv_heads % mesh.shape["model"] == 0)
+            else None)
+    return PrefillPlan(ax, mesh.shape[ax], g_ax), ""
+
+
 # ----------------------------------------------------------------- caches --
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, *,

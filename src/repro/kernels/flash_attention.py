@@ -26,7 +26,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             bq: int, bk: int, n_k: int, causal: bool, window: int,
-            cap: float, stride: int, scale: float):
+            cap: float, stride: int, scale: float, n_kv: int):
     i = pl.program_id(2)          # q block
     j = pl.program_id(3)          # kv block
 
@@ -62,6 +62,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask &= k_pos <= q_pos
         if window:
             mask &= k_pos > q_pos - window
+        if n_k * bk > n_kv:          # padded ragged KV tail: mask it out
+            mask &= k_pos < n_kv
         s = jnp.where(mask, s, NEG_INF)
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -87,17 +89,29 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     cap: float = 0.0, kv_keep_stride: int = 1,
                     bq: int = 128, bk: int = 128, interpret: bool = False):
-    """q: (B,H,Sq,hd); k/v: (B,KVH,Skv,hd); returns (B,H,Sq,hd)."""
+    """q: (B,H,Sq,hd); k/v: (B,KVH,Skv,hd); returns (B,H,Sq,hd).
+
+    Ragged sequence lengths (``Sq``/``Skv`` not multiples of the block size)
+    are padded up to the block grid and masked: padded KV columns are
+    excluded from every softmax row (explicitly for the tail block, by
+    causality for the rest) and padded query rows are sliced off the output
+    — no silent miscompute on the final partial block."""
     B, H, Sq, hd = q.shape
     _, KVH, Skv, _ = k.shape
     rep = H // KVH
     bq, bk = min(bq, Sq), min(bk, Skv)
-    assert Sq % bq == 0 and Skv % bk == 0
-    grid = (B, H, Sq // bq, Skv // bk)
+    pad_q, pad_k = -Sq % bq, -Skv % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skvp = Sq + pad_q, Skv + pad_k
+    grid = (B, H, Sqp // bq, Skvp // bk)
     kernel = functools.partial(
-        _kernel, bq=bq, bk=bk, n_k=Skv // bk, causal=causal, window=window,
-        cap=cap, stride=kv_keep_stride, scale=hd ** -0.5)
-    return pl.pallas_call(
+        _kernel, bq=bq, bk=bk, n_k=Skvp // bk, causal=causal, window=window,
+        cap=cap, stride=kv_keep_stride, scale=hd ** -0.5, n_kv=Skv)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -119,3 +133,4 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                  "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :Sq] if pad_q else out

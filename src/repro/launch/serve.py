@@ -130,6 +130,7 @@ def main(argv=None):
                       max_admission_chunks=args.max_admission_chunks,
                       qos_guard=args.qos_guard)
     print(f"dispatch: {eng.explain_dispatch()}")
+    print(f"dispatch: {eng.explain_prefill_dispatch()}")
     if args.variant is not None:
         eng.set_variant(names.index(args.variant))
 

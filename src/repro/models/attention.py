@@ -354,6 +354,69 @@ def explain_dispatch(cfg: ModelConfig, mesh, *, batch_slots: int,
     return f"paged decode: GSPMD dense gather FALLBACK under mesh — {reason}"
 
 
+def _warn_prefill(reason: str) -> None:
+    """Prefill's mirror of ``_warn_gather``: a mesh silently running every
+    admission chunk's attention whole on each device is the idle-7-of-8
+    regression class the ring replaces."""
+    key = "prefill:" + reason
+    if key in _GATHER_WARNED:
+        return
+    _GATHER_WARNED.add(key)
+    print("repro: chunked-prefill admission under a mesh is taking the "
+          f"GSPMD unsharded path — {reason}; each chunk's attention runs "
+          "whole per device (no sequence parallelism)", file=sys.stderr)
+
+
+def _prefill_ring_plan(cfg: ModelConfig, mesh, chunk_len: int,
+                       use_kernel: Optional[bool]):
+    """The (plan, reason) both chunk cells dispatch on, with the trace-time
+    counter bump (ring_prefill / prefill_gather_mesh / prefill_single) and
+    the loud fallback warning — prefill's mirror of the paged-decode
+    dispatch block."""
+    from repro.kernels import ops as kops
+    if mesh is None:
+        DISPATCH_COUNTS["prefill_single"] += 1
+        return None, "no mesh (single device)"
+    if use_kernel is None:
+        use_kernel = kops._on_tpu()
+    if not use_kernel:
+        plan, reason = None, "kernel off: not on TPU"
+    else:
+        from repro.dist.sharding import prefill_plan
+        plan, reason = prefill_plan(cfg, mesh, chunk_len)
+    if plan is not None:
+        DISPATCH_COUNTS["ring_prefill"] += 1
+        return plan, ""
+    DISPATCH_COUNTS["prefill_gather_mesh"] += 1
+    _warn_prefill(reason)
+    return None, reason
+
+
+def explain_prefill_dispatch(cfg: ModelConfig, mesh, *, chunk_len: int,
+                             use_kernel: Optional[bool] = None) -> str:
+    """One-line description of the chunked-prefill admission path this
+    configuration dispatches to (surfaced next to ``explain_dispatch`` in
+    the ``launch/serve.py`` startup banner)."""
+    from repro.kernels import ops as kops
+    if use_kernel is None:
+        use_kernel = kops._on_tpu()
+    if mesh is None:
+        return "chunked prefill: whole-chunk admission cell, single device"
+    if not use_kernel:
+        return ("chunked prefill: GSPMD unsharded admission under mesh "
+                "(kernel off: not on TPU)")
+    from repro.dist.sharding import prefill_plan
+    plan, reason = prefill_plan(cfg, mesh, chunk_len)
+    if plan is not None:
+        heads = (f"kv_heads over {plan.kv_head_axis!r}"
+                 if plan.kv_head_axis else "kv_heads replicated")
+        return ("chunked prefill: ring attention shard_map'd over "
+                f"{plan.seq_axis!r} ({plan.n_shards} sequence shards, "
+                f"{heads})")
+    return ("chunked prefill: GSPMD unsharded admission FALLBACK under "
+            f"mesh — {reason}")
+
+
 def _flat_axis_index(mesh, axes):
     """Linear shard index over (possibly several) mesh axes, major-first —
     matches how GSPMD linearizes a dim sharded over an axis tuple."""
@@ -536,7 +599,9 @@ def paged_decode_attention(params, x, position, cache: PagedKVCache,
 
 def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
                           cfg: ModelConfig, slot, *, window: int = 0,
-                          kv_scale: float = 0.0, dyn_scatter: bool = False):
+                          kv_scale: float = 0.0, dyn_scatter: bool = False,
+                          mesh=None, use_kernel: Optional[bool] = None,
+                          interpret: bool = False):
     """C-token prompt-chunk step for ONE slot of the paged pool (chunked
     admission). x: (1,C,D); positions: (1,C); ``slot`` is a traced scalar —
     one executable per chunk length serves every slot and every chunk.
@@ -546,6 +611,17 @@ def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
     causally masked by position. Prefix-shared pages are simply already
     present in the block row; chunks the engine skipped on a prefix hit were
     never run.
+
+    ``mesh`` + kernel requested: when ``dist.sharding.prefill_plan`` finds a
+    sequence layout, the attend runs in ``kernels.ring_attention``. The
+    slot's pages live on ONE shard under slot affinity, so the block-table
+    gather stays *outside* the ring region — GSPMD moves each mapped page
+    once into the ring's sequence-sharded layout (the per-shard rebase: each
+    shard holds a contiguous slice of the gathered context and its absolute
+    positions) — and the dominant O(C x L) attention compute/bytes then
+    split 1/n_shards per device. Unmapped block entries fold into the
+    position lane as -1 before the ring, which masks them identically to
+    ``_gather_pages``. Fallback is the whole-chunk gather + ``_sdpa``.
     """
     from repro.dist.annotate import constrain_replicated
     B, C, D = x.shape
@@ -586,6 +662,21 @@ def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
         nppos = _page_scatter(sel, write, cache.ppos, pos_c)
     new_cache = PagedKVCache(nkp, nvp, nppos, cache.block)
 
+    plan, _ = _prefill_ring_plan(cfg, mesh, C, use_kernel)
+    if plan is not None:
+        from repro.kernels.ring_attention import ring_chunk_attention
+        M = brow.shape[0]
+        gk = jnp.take(nkp, brow[None], axis=0).reshape(B, M * P, G, hd)
+        gv = jnp.take(nvp, brow[None], axis=0).reshape(B, M * P, G, hd)
+        gpos = jnp.take(nppos, brow[None], axis=0).reshape(B, M * P)
+        mapped = jnp.repeat(brow[None] != 0, P, axis=1)
+        kv_pos = jnp.where(mapped, gpos, -1)
+        o = ring_chunk_attention(q.reshape(B, C, G, R, hd), gk, gv,
+                                 positions, kv_pos, mesh=mesh, plan=plan,
+                                 window=window, cap=cfg.attn_softcap,
+                                 kv_scale=kv_scale, interpret=interpret)
+        return _merge(o, B, C, cfg.q_dim) @ params["wo"], new_cache
+
     kk, vv, _, valid = _gather_pages(new_cache, brow[None], positions,
                                      window=window)
     dq = (lambda a: dequantize_kv(a, q.dtype, kv_scale)) if kv_scale else \
@@ -598,7 +689,9 @@ def paged_chunk_attention(params, x, positions, cache: PagedKVCache,
 
 def chunk_decode_attention(params, x, positions, cache: KVCache,
                            cfg: ModelConfig, *, window: int = 0,
-                           kv_scale: float = 0.0):
+                           kv_scale: float = 0.0, mesh=None,
+                           use_kernel: Optional[bool] = None,
+                           interpret: bool = False):
     """C-token prompt-chunk step against an existing ring cache.
 
     x: (B,C,D); positions: (B,C) absolute. The chunk attends to every valid
@@ -607,6 +700,13 @@ def chunk_decode_attention(params, x, positions, cache: KVCache,
     token-by-token warmup would have used — so decode continues bit-compatibly
     from ``cache.cursor + C``. The generalization of ``decode_attention`` to
     C tokens (C=1 reduces to it); the chunked-prefill admission path.
+
+    ``mesh`` + kernel requested: when ``dist.sharding.prefill_plan`` finds a
+    sequence layout, the attend runs in ``kernels.ring_attention`` — queries
+    resident per shard, the [cache; chunk] context rotating by ``ppermute``
+    with the online-softmax state carried across hops — so admission compute
+    scales 1/n_shards per device. Otherwise the whole-chunk ``_sdpa`` below
+    is taken and ``_warn_prefill`` says so (once per reason).
     """
     from repro.dist.annotate import constrain_replicated
     B, C, D = x.shape
@@ -652,6 +752,17 @@ def chunk_decode_attention(params, x, positions, cache: KVCache,
     # attend over [prior ring entries; full chunk] so intra-chunk tokens are
     # visible even when C exceeds the ring (local layers attend pre-eviction,
     # exactly like the full-sequence banded path).
+    plan, _ = _prefill_ring_plan(cfg, mesh, C, use_kernel)
+    if plan is not None:
+        from repro.kernels.ring_attention import ring_chunk_attention
+        kk_s = jnp.concatenate([cache.k, k_store], axis=1)  # storage dtype
+        vv_s = jnp.concatenate([cache.v, v_store], axis=1)
+        kv_pos = jnp.concatenate([cache.pos, positions], axis=1)
+        o = ring_chunk_attention(q.reshape(B, C, G, R, hd), kk_s, vv_s,
+                                 positions, kv_pos, mesh=mesh, plan=plan,
+                                 window=window, cap=cfg.attn_softcap,
+                                 kv_scale=kv_scale, interpret=interpret)
+        return _merge(o, B, C, cfg.q_dim) @ params["wo"], new_cache
     dq = (lambda a: dequantize_kv(a, q.dtype, kv_scale)) if kv_scale else \
         (lambda a: a.astype(q.dtype))
     kk = jnp.concatenate([dq(cache.k), dq(k_store)], axis=1)

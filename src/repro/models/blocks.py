@@ -69,11 +69,15 @@ def block_forward(kind: str, params, h, positions, cfg: ModelConfig,
 
 def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
                   knobs: ApproxKnobs = PRECISE, *,
-                  ep_axis: Optional[str] = None, mesh=None):
+                  ep_axis: Optional[str] = None, mesh=None,
+                  use_kernel: Optional[bool] = None, interpret: bool = False):
     """C-token prompt-chunk step against an existing cache.
 
     h: (B,C,D); positions: (B,C) absolute. Returns (h, new_cache, aux) — the
-    chunk-sized sibling of ``block_decode`` (serving admission path)."""
+    chunk-sized sibling of ``block_decode`` (serving admission path). Under
+    a ``mesh`` the attention runs ring-sequence-parallel when
+    ``dist.sharding.prefill_plan`` allows (``use_kernel``/``interpret``
+    mirror ``block_decode``'s kernel dispatch knobs)."""
     aux = jnp.zeros((), jnp.float32)
     prec = knobs.matmul_precision
     if kind == MAMBA:
@@ -85,7 +89,8 @@ def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
     kv_scale = attn_mod.KV_SCALE if knobs.kv_quant else 0.0
     y, new_cache = attn_mod.chunk_decode_attention(
         params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
-        positions, cache, cfg, window=window, kv_scale=kv_scale)
+        positions, cache, cfg, window=window, kv_scale=kv_scale, mesh=mesh,
+        use_kernel=use_kernel, interpret=interpret)
     h = h + y
     hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
     if "moe" in params:
@@ -101,7 +106,9 @@ def block_prefill(kind: str, params, h, positions, cache, cfg: ModelConfig,
 def block_prefill_paged(kind: str, params, h, positions, cache,
                         cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                         slot, ep_axis: Optional[str] = None, mesh=None,
-                        dyn_scatter: bool = False):
+                        dyn_scatter: bool = False,
+                        use_kernel: Optional[bool] = None,
+                        interpret: bool = False):
     """Paged sibling of ``block_prefill``: one slot's prompt chunk against
     the shared page pool / per-slot Mamba rows. h: (1,C,D); ``slot`` traced.
     """
@@ -126,7 +133,8 @@ def block_prefill_paged(kind: str, params, h, positions, cache,
     y, new_cache = attn_mod.paged_chunk_attention(
         params["attn"], rms_norm(h, params["norm_attn"], cfg.norm_eps),
         positions, cache, cfg, slot, window=window, kv_scale=kv_scale,
-        dyn_scatter=dyn_scatter)
+        dyn_scatter=dyn_scatter, mesh=mesh, use_kernel=use_kernel,
+        interpret=interpret)
     h = h + y
     hn = rms_norm(h, params["norm_mlp"], cfg.norm_eps)
     if "moe" in params:

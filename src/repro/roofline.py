@@ -210,6 +210,41 @@ def model_flops(cfg, shape, knobs=None) -> float:
     return 3.0 * (matmul + attn + ssd)      # fwd + 2x bwd
 
 
+def admission_terms(cfg, chunk_len: int, kv_len: int, *, n_shards: int = 1,
+                    kv_quant: bool = False):
+    """Per-DEVICE roofline terms of ONE admission chunk's attention.
+
+    Sums ``kernels.ring_attention``'s per-device cost model over the
+    config's attention layers (local layers clamp the visible context to
+    their window) and prices it against the chip constants. ``n_shards`` is
+    the ring plan's shard count (1 = unsharded): the admission compute/HBM
+    terms divide by it, which is exactly what the arbiter's pressure
+    attribution for the admission axis should see on a mesh. Returns a dict
+    with ``flops_per_device`` / ``hbm_bytes_per_device`` / ``compute_s`` /
+    ``memory_s``."""
+    from repro.configs.base import ATTN, LOCAL_ATTN, SHARED_ATTN
+    from repro.kernels.ring_attention import (sharded_prefill_attn_flops,
+                                              sharded_prefill_hbm_bytes)
+    hd = cfg.resolved_head_dim
+    kv_bytes = 1 if kv_quant else 4
+    flops = bytes_ = 0.0
+    for kind in cfg.kinds():
+        if kind in (ATTN, SHARED_ATTN):
+            kv = kv_len
+        elif kind == LOCAL_ATTN:
+            kv = min(cfg.window + chunk_len, kv_len)
+        else:
+            continue
+        flops += sharded_prefill_attn_flops(chunk_len, kv, cfg.n_heads, hd,
+                                            n_shards=n_shards)
+        bytes_ += sharded_prefill_hbm_bytes(chunk_len, kv, cfg.n_kv_heads,
+                                            hd, n_shards=n_shards,
+                                            n_heads=cfg.n_heads,
+                                            kv_bytes=kv_bytes)
+    return {"flops_per_device": flops, "hbm_bytes_per_device": bytes_,
+            "compute_s": flops / PEAK_FLOPS, "memory_s": bytes_ / HBM_BW}
+
+
 def decode_min_bytes(cfg, shape, n_chips: int, kv_quant: bool = False):
     """Kernel-adjusted lower bound on per-chip decode memory traffic: weights
     + KV/SSM state read once per token step (what the fused Pallas

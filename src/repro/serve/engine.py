@@ -176,6 +176,15 @@ class ServeEngine:
             self._decode_plan, self._plan_reason = \
                 dist_sharding.paged_decode_plan(
                     self.cfg, self.mesh, self.batch_slots, self.n_pages)
+        # ring-prefill sequence plan: decided ONCE from (cfg, mesh,
+        # prefill_chunk) — the same pure function the traced admission cells
+        # re-derive per chunk length (ragged final chunks may differ)
+        self._prefill_plan, self._prefill_reason = None, "single device"
+        if self.mesh is not None:
+            from repro.dist import sharding as dist_sharding
+            self._prefill_plan, self._prefill_reason = \
+                dist_sharding.prefill_plan(self.cfg, self.mesh,
+                                           self.prefill_chunk)
         if self.paged:
             n_shards = (self._decode_plan.n_shards
                         if self._decode_plan is not None else 1)
@@ -296,6 +305,24 @@ class ServeEngine:
             self.cfg, self.mesh, batch_slots=self.batch_slots,
             n_pages=self._page_spec.n_pages, use_kernel=self.use_kernel)
 
+    @property
+    def sharded_prefill(self) -> bool:
+        """True when this engine's admission chunks run the ring-attention
+        sequence-parallel cell (full-size chunks; ragged tails re-plan)."""
+        if self._prefill_plan is None:
+            return False
+        if self.use_kernel is not None:
+            return bool(self.use_kernel)
+        from repro.kernels import ops as kops
+        return kops._on_tpu()
+
+    def explain_prefill_dispatch(self) -> str:
+        """One-line chunked-prefill dispatch description (startup banner)."""
+        from repro.models import attention as attn_mod
+        return attn_mod.explain_prefill_dispatch(
+            self.cfg, self.mesh, chunk_len=self.prefill_chunk,
+            use_kernel=self.use_kernel)
+
     # ------------------------------------------------------------ variants --
 
     @property
@@ -396,7 +423,8 @@ class ServeEngine:
         if self.paged:
             step = step_mod.make_paged_admission_step(
                 self.cfg, self.active_knobs,
-                dynamic_scatter=self.mesh is None)
+                dynamic_scatter=self.mesh is None, mesh=self.mesh,
+                use_kernel=self.use_kernel, interpret=self.kernel_interpret)
             if self.mesh is None:
                 fn = jax.jit(step)
             else:
@@ -405,7 +433,9 @@ class ServeEngine:
                                            self._cache_sh, None),
                              out_shardings=(None, self._cache_sh))
         else:
-            step = step_mod.make_admission_step(self.cfg, self.active_knobs)
+            step = step_mod.make_admission_step(
+                self.cfg, self.active_knobs, mesh=self.mesh,
+                use_kernel=self.use_kernel, interpret=self.kernel_interpret)
             if self.mesh is None:
                 fn = jax.jit(step)
             else:

@@ -92,7 +92,8 @@ def _mamba_block_with_state(params, h, cfg, knobs):
 
 
 def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
-                  knobs: ApproxKnobs = PRECISE):
+                  knobs: ApproxKnobs = PRECISE, *, mesh=None,
+                  use_kernel: Optional[bool] = None, interpret: bool = False):
     """One prompt chunk against existing decode caches (chunked admission).
 
     tokens: (B, C); start: scalar int32 absolute position of the chunk's
@@ -101,6 +102,11 @@ def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
     advanced caches). Iterating this over prompt chunks is the serving
     admission path: 32k prompts stream through fixed-size executables instead
     of one O(prompt) warmup per token or one giant full-sequence compile.
+
+    Under a ``mesh`` each chunk's attention goes ring-sequence-parallel when
+    ``dist.sharding.prefill_plan(cfg, mesh, C)`` applies (the same pure plan
+    the engine and the explorer's pricing derive), else the loud unsharded
+    fallback; ``use_kernel``/``interpret`` mirror the decode dispatch knobs.
     """
     from repro.models.blocks import block_prefill
     h = params["embed"][tokens]
@@ -114,7 +120,9 @@ def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
         for j, kind in enumerate(cfg.pattern):
             p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
             h, nc, _ = block_prefill(kind, p, h, positions, group_caches[j],
-                                     cfg, knobs)
+                                     cfg, knobs, mesh=mesh,
+                                     use_kernel=use_kernel,
+                                     interpret=interpret)
             new_caches.append(nc)
         return h, tuple(new_caches)
 
@@ -125,7 +133,9 @@ def prefill_chunk(params, tokens, start, caches, cfg: ModelConfig,
 
 def paged_prefill_chunk(params, tokens, start, caches, slot,
                         cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
-                        dyn_scatter: bool = False):
+                        dyn_scatter: bool = False, *, mesh=None,
+                        use_kernel: Optional[bool] = None,
+                        interpret: bool = False):
     """One prompt chunk for ONE slot of the paged engine caches.
 
     tokens: (1, C); start: traced scalar absolute position; slot: traced
@@ -148,7 +158,9 @@ def paged_prefill_chunk(params, tokens, start, caches, slot,
             p = shared if kind == SHARED_ATTN else group_params.get(f"pos{j}")
             h, nc, _ = block_prefill_paged(kind, p, h, positions,
                                            group_caches[j], cfg, knobs,
-                                           slot=slot, dyn_scatter=dyn_scatter)
+                                           slot=slot, dyn_scatter=dyn_scatter,
+                                           mesh=mesh, use_kernel=use_kernel,
+                                           interpret=interpret)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

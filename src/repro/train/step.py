@@ -193,35 +193,49 @@ def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
     return step
 
 
-def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE):
+def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                        mesh=None, use_kernel: Optional[bool] = None,
+                        interpret: bool = False):
     """Returns step(params, tokens, start, caches) -> (logits, caches).
 
     One prompt chunk against existing decode caches — the serving engine's
     chunked-prefill admission cell. ``start`` is traced, so ONE executable
-    per (variant, chunk length) serves every chunk of a streaming prompt."""
+    per (variant, chunk length) serves every chunk of a streaming prompt.
+    Under a ``mesh`` the chunk attention dispatches on
+    ``dist.sharding.prefill_plan`` (ring sequence parallelism);
+    ``use_kernel``/``interpret`` mirror ``make_paged_serve_step``."""
     from repro.serve import prefill as prefill_mod
 
     def step(params, tokens, start, caches):
         return prefill_mod.prefill_chunk(params, tokens, start, caches, cfg,
-                                         knobs=knobs)
+                                         knobs=knobs, mesh=mesh,
+                                         use_kernel=use_kernel,
+                                         interpret=interpret)
     return step
 
 
 def make_paged_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE,
-                              *, dynamic_scatter: bool = False):
+                              *, dynamic_scatter: bool = False, mesh=None,
+                              use_kernel: Optional[bool] = None,
+                              interpret: bool = False):
     """Returns step(params, tokens, start, caches, slot) -> (logits, caches).
 
     The paged engine's admission cell: one prompt chunk written straight
     into the batched page-pool caches at ``slot``'s block-table row. Both
     ``start`` and ``slot`` are traced — ONE executable per (variant, chunk
     length) serves every chunk of every slot. ``dynamic_scatter`` as in
-    ``make_paged_serve_step``."""
+    ``make_paged_serve_step``; ``mesh``/``use_kernel``/``interpret`` select
+    the ring-sequence-parallel chunk attention when the prefill plan
+    applies."""
     from repro.serve import prefill as prefill_mod
 
     def step(params, tokens, start, caches, slot):
         return prefill_mod.paged_prefill_chunk(params, tokens, start, caches,
                                                slot, cfg, knobs=knobs,
-                                               dyn_scatter=dynamic_scatter)
+                                               dyn_scatter=dynamic_scatter,
+                                               mesh=mesh,
+                                               use_kernel=use_kernel,
+                                               interpret=interpret)
     return step
 
 
