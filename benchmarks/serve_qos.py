@@ -188,6 +188,24 @@ def main(rows: Rows):
     for shape, st in admission.items():
         rows.add(f"serve.admission.{shape}", st["admit_compute_p95_ms"],
                  st["prefill_dispatch"])
+    # chaos smoke (8 simulated devices, subprocess): revoke 2 of 8 devices
+    # mid-decode with a grace deadline, restore them later. The child runs
+    # the SAME trace unfaulted first and asserts zero dropped requests and
+    # exact greedy token parity — deflation must be invisible to clients —
+    # then reports recovery time and QoS during the shrunk window. CI gates
+    # on dropped == 0 and token_parity.
+    proc = subprocess.run([sys.executable, "-c", _ELASTIC_CHILD],
+                          capture_output=True, text=True, env=env)
+    line = next((l for l in proc.stdout.splitlines()
+                 if l.startswith("ELASTIC_JSON:")), None)
+    assert line is not None, (proc.stdout, proc.stderr[-2000:])
+    est = json.loads(line[len("ELASTIC_JSON:"):])
+    out["elastic"] = est
+    rows.add("serve.elastic", est["recovery_steps"],
+             f"dropped={est['dropped']};parity={est['token_parity']};"
+             f"pages={est['pages_migrated']};"
+             f"qos_shrink_ms={est['qos_during_shrink_p95_ms']:.1f};"
+             f"qos_steady_ms={est['qos_steady_p95_ms']:.1f}")
     (RESULTS_DIR / "BENCH_serve.json").write_text(json.dumps(out, indent=1))
     return rows
 
@@ -221,4 +239,66 @@ out = {"mesh_shape": dict(eng.mesh.shape),
        "admit_compute_p95_ms": (1e3 * float(np.percentile(ac, 95))
                                 if ac else 0.0)}
 print("ADMIT_JSON:" + json.dumps(out))
+"""
+
+# the chaos smoke: 8 simulated devices, revoke 2 mid-decode (2-step grace),
+# restore later; unfaulted reference run first, parity asserted IN the child
+_ELASTIC_CHILD = """
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.dist import elastic
+from repro.launch.mesh import make_mesh
+from repro.models import api
+from repro.serve.engine import Request, ServeEngine
+
+cfg = get_config("gemma2-27b-smoke")
+params = api.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+rng = np.random.default_rng(7)
+prompts = [list(rng.integers(1, cfg.vocab_size, 6)) for _ in range(8)]
+
+def run(script):
+    mesh = make_mesh((2, 4), ("data", "model"))
+    eng = ServeEngine(cfg, batch_slots=4, max_len=32, params=params,
+                      mesh=mesh, paged=True, page_size=4, prefill_chunk=8,
+                      use_kernel=True, kernel_interpret=True)
+    reqs = [Request(i, prompt=list(p), max_new=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    inj = elastic.FaultInjector.parse(script) if script else None
+    steps = 0
+    while not eng.idle and steps < 2000:
+        if inj is not None:
+            for ev in inj.due(steps):
+                eng.inject(ev)
+        eng.step()
+        steps += 1
+    assert eng.idle, "chaos run did not drain"
+    return eng, reqs
+
+ref_eng, ref = run("")
+# grace deadline lands at step 4 — mid-decode of the first wave, so live
+# pages migrate off the revoked shard; restore at 9 re-homes the second wave
+eng, got = run("revoke@2+2:2,restore@9")
+rehomes = [e for e in eng.elastic_log if "mesh_shape" in e]
+assert len(rehomes) == 2, eng.elastic_log
+shrink, grow = rehomes
+lat = np.asarray(eng.step_latencies, float)
+lo, hi = shrink["step_index"], grow["step_index"]
+shrunk, steady = lat[lo:hi], np.concatenate([lat[:lo], lat[hi:]])
+out = dict(
+    dropped=sum(1 for r in got if not r.done) + len(eng.rejected),
+    token_parity=bool([r.out for r in got] == [r.out for r in ref]),
+    recovery_steps=shrink["recovery_steps"],
+    grow_recovery_steps=grow["recovery_steps"],
+    pages_migrated=shrink["pages_migrated"],
+    cutover_s=shrink["cutover_s"],
+    mesh_during_shrink=shrink["mesh_shape"],
+    qos_during_shrink_p95_ms=(1e3 * float(np.percentile(shrunk, 95))
+                              if len(shrunk) else 0.0),
+    qos_steady_p95_ms=1e3 * float(np.percentile(steady, 95)))
+assert out["dropped"] == 0 and out["token_parity"], out
+print("ELASTIC_JSON:" + json.dumps(out))
 """

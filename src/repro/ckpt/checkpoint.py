@@ -18,13 +18,21 @@ import os
 import pathlib
 import shutil
 import signal
+import sys
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Dict, Optional
+import zipfile
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+# everything a truncated/partial checkpoint (simulated kill mid-write, torn
+# copy) can raise on load: bad manifest JSON, torn npz central directory,
+# missing arrays, shape/leaf-count drift, vanished files
+CORRUPT_ERRORS = (json.JSONDecodeError, zipfile.BadZipFile, KeyError,
+                  AssertionError, ValueError, EOFError, OSError)
 
 
 def _flatten(tree):
@@ -106,6 +114,21 @@ def latest_step(root: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def all_steps(root: str) -> List[int]:
+    """Every step directory present (descending), manifest or not — the
+    corruption-tolerant restore scans these newest-first."""
+    root = pathlib.Path(root)
+    if not root.exists():
+        return []
+    steps = []
+    for p in root.glob("step_*"):
+        try:
+            steps.append(int(p.name.split("_")[-1]))
+        except ValueError:
+            continue
+    return sorted(steps, reverse=True)
+
+
 class CheckpointManager:
     """Periodic + async checkpointing with retention and preemption hook.
 
@@ -123,6 +146,12 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._last_tree = None
         self._last_step = None
+        self.skipped: List[str] = []    # corrupt checkpoints skipped on
+        # restore (audit trail for the loud warning)
+        # a kill mid-``save`` leaves the stage dir behind (the rename never
+        # ran, so the checkpoint set itself is intact) — sweep stale stages
+        for tmp in self.root.glob(".ckpt_tmp_*"):
+            shutil.rmtree(tmp, ignore_errors=True)
         if install_sigterm:
             signal.signal(signal.SIGTERM, self._on_sigterm)
 
@@ -165,8 +194,19 @@ class CheckpointManager:
             self._thread.join()
 
     def restore_latest(self, like_tree, *, shardings=None):
-        step = latest_step(self.root)
-        if step is None:
-            return None, None
-        return restore(self.root / f"step_{step}", like_tree,
-                       shardings=shardings)
+        """Restore the newest LOADABLE checkpoint, scanning steps newest-
+        first and SKIPPING — with a loud warning, never a crash — any that a
+        simulated kill or torn copy left truncated/partial (bad manifest
+        JSON, torn npz, missing arrays, shape/leaf drift). A fleet restart
+        must come back from the best intact state it has, not die on the
+        worst; skipped paths are recorded on ``self.skipped``."""
+        for step in all_steps(self.root):
+            path = self.root / f"step_{step}"
+            try:
+                return restore(path, like_tree, shardings=shardings)
+            except CORRUPT_ERRORS as e:
+                self.skipped.append(str(path))
+                print(f"WARNING: skipping corrupt/partial checkpoint {path} "
+                      f"({type(e).__name__}: {e}) — falling back to an "
+                      "older step", file=sys.stderr)
+        return None, None

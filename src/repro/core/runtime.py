@@ -59,6 +59,8 @@ class PliantRuntime:
                                                           self.cfg)
         self.history = collections.deque(maxlen=self.cfg.history_limit)
         self._last_decision = time.monotonic()
+        self._capacity_out = 0      # outstanding PRESSURE_ON capacity events
+        self.capacity_log: List[dict] = []
 
     def _sync_cfg_budget(self) -> None:
         """Single-tenant compat: ``cfg.max_reclaim`` mirrors the tenant's
@@ -126,6 +128,37 @@ class PliantRuntime:
     def step_executable(self) -> Any:
         return self.table.executable(self.active_variant)
 
+    # ------------------------------------------------------------ capacity --
+
+    def notify_capacity(self, ev) -> None:
+        """A ``dist.elastic.CapacityEvent`` is a CONTENTION SOURCE: while
+        any revocation or quota cut is outstanding, every decision tick sees
+        the violation arm of the Fig. 3 hysteresis — the arbiter
+        de-approximates / reclaims from victims exactly as it does under QoS
+        pressure, and a restore lets the slack arm walk tenants back toward
+        precise. The arbiter itself is unchanged; deflation simply enters
+        the loop through the same gate as a p99 violation."""
+        from repro.dist import elastic
+        if ev.kind in elastic.PRESSURE_ON:
+            self._capacity_out += 1
+        elif ev.kind in elastic.PRESSURE_OFF:
+            self._capacity_out = max(self._capacity_out - 1, 0)
+        self.capacity_log.append(dict(t=time.monotonic(), kind=ev.kind,
+                                      outstanding=self._capacity_out))
+
+    @property
+    def capacity_pressure(self) -> bool:
+        return self._capacity_out > 0
+
+    def inject(self, ev) -> None:
+        """Fleet-level fault entry point (colocate/train drivers): record
+        the event as contention pressure here, then fan it out to every
+        tenant's ``on_capacity`` actuator (the serve adapter re-homes its
+        engine, the train adapter reshards mid-flight)."""
+        self.notify_capacity(ev)
+        for t in self.tenants:
+            t.on_capacity(ev)
+
     # ----------------------------------------------------------- decisions --
 
     def maybe_decide(self, now: Optional[float] = None) -> Optional[Action]:
@@ -137,6 +170,11 @@ class PliantRuntime:
         # one reset-window convention for every control plane (sim included):
         # read the closing window, act on it, start the next one fresh
         _, violated, slack = self.monitor.consume_window()
+        if self.capacity_pressure:
+            # outstanding capacity loss: force the violation arm (and mask
+            # any slack reading — returning quanta while deflated would
+            # fight the revocation)
+            violated, slack = True, False
         action, victim = self.arbiter.tick(violated, slack, t=now)
         self.history.append({
             "t": now, "action": action.value, "victim": victim,
@@ -144,5 +182,6 @@ class PliantRuntime:
             "variants": tuple(s.variant for s in self.arbiter.states),
             "reclaimed_all": tuple(s.reclaimed
                                    for s in self.arbiter.states),
-            "violated": violated, "slack": slack})
+            "violated": violated, "slack": slack,
+            "capacity": self._capacity_out})
         return action

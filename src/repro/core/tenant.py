@@ -124,6 +124,17 @@ class Tenant:
         if self.reshard_fn is not None:
             self.reshard_fn(total)
 
+    # ------------------------------------------------------------ capacity --
+
+    def on_capacity(self, ev) -> None:
+        """Receive a ``dist.elastic.CapacityEvent`` fanned out by
+        ``PliantRuntime.inject`` (which has ALREADY recorded it as
+        contention pressure). Adapters with an elastic substrate actuate:
+        the serve adapter re-homes its engine, the train adapter reshards
+        its params/optimizer mid-flight. The base tenant has nothing to
+        shrink — pressure alone (variant ladder via the arbiter) is its
+        whole response."""
+
 
 @dataclass
 class TrainTenant(Tenant):
@@ -136,6 +147,11 @@ class TrainTenant(Tenant):
     reshard_fn: Optional[Callable[[int], None]] = None
     max_reclaim: int = 0
     n_quanta: int = 1
+    # live-shrink actuator: receives each CapacityEvent fanned out by
+    # ``PliantRuntime.inject``; the launch/train chaos path binds it to the
+    # mid-flight ``dist.elastic.reshard_live`` of (params, optimizer state)
+    # on the surviving mesh + a variant-table recompile
+    elastic_fn: Optional[Callable[[Any], None]] = None
     _variant: int = field(default=0, init=False)
     _reclaimed: int = field(default=0, init=False)
 
@@ -146,6 +162,10 @@ class TrainTenant(Tenant):
             # before the arbiter steps the tenant back toward precise
             self.max_reclaim = 0
         self.n_quanta = max(self.n_quanta, self.max_reclaim + 1)
+
+    def on_capacity(self, ev) -> None:
+        if self.elastic_fn is not None:
+            self.elastic_fn(ev)
 
 
 @dataclass
@@ -183,6 +203,11 @@ class ServeTenant(Tenant):
         if self.engine.pool is not None:
             self.engine.pool.set_reclaimed(total)
         super()._on_reclaimed(total)     # honor a late-bound actuator too
+
+    def on_capacity(self, ev) -> None:
+        # runtime already recorded the pressure (inject fans out AFTER
+        # notify_capacity) — route actuation only, no double count
+        self.engine.inject(ev, notify_runtime=False)
 
     def pressure(self, t: float = 0.0,
                  variant: Optional[int] = None) -> ResourcePressure:

@@ -1,0 +1,259 @@
+"""Deflation-grade elasticity: capacity events, deterministic fault
+injection, and live (mid-flight) elastic reshard.
+
+The harshest resource pressure in a real fleet is not a slow co-tenant but
+*capacity revocation*: preempted devices, transient servers reclaimed with a
+deadline, a co-tenant's emergency quota grab, a flaky interconnect failing a
+collective. The VM-deflation literature (PAPERS.md) shows interactive
+services can ride these out gracefully instead of being killed; this module
+is the substrate that lets every driver in the repo script and survive them:
+
+* ``CapacityEvent`` — one revocation/restore/quota/collective incident, with
+  an optional grace ``deadline_steps`` (transient-server notice: the victim
+  keeps the capacity for that many steps and must be off it by the end).
+* ``FaultInjector`` — a deterministic, seedable event schedule keyed by the
+  driver's step counter. Drivers poll ``due(step)`` each iteration and route
+  the events to their engine/runtime/tenants; the same script replayed under
+  the same seed produces the same faults, so chaos runs are reproducible and
+  CI can assert token parity against an unfaulted reference.
+* ``surviving_mesh`` — the largest rectangular mesh over the devices that
+  remain after a revocation, preserving model-parallel axis sizes (weight
+  dims divide them) and shrinking batch axes. Layout feasibility downstream
+  (slot-affinity decode plan, ring-prefill plan) is re-derived by the same
+  pure plan functions the engine always uses — a shrink that loses the fast
+  path degrades loudly to the gather/unsharded fallback, it never corrupts.
+* ``reshard_live`` — the checkpoint-time elastic reshard (``ckpt.restore``
+  onto any mesh) without the disk round-trip: host-stage the tree, then
+  ``device_put`` with the target shardings. Used for mid-flight params AND
+  optimizer state when a train job shrinks, and for serve caches when an
+  engine re-homes its pool.
+
+Kinds:
+
+* ``REVOKE``   — ``count`` devices (or an explicit ``devices`` tuple) leave
+  at ``step + deadline_steps``; the grace window is the degradation window.
+* ``RESTORE``  — revoked devices return (all of them when ``devices`` is
+  empty); the tenant re-inflates through the same Fig. 3 slack path it
+  de-approximated through.
+* ``QUOTA_CUT`` / ``QUOTA_RESTORE`` — a co-tenant's emergency grab of
+  ``quanta`` pool quanta: enforced as a hard capacity floor on the page
+  pool, *separate* from the Pliant reclaim ledger so the arbiter's
+  accounting never diverges from its own actuations.
+* ``COLLECTIVE_FAILURE`` — ``count`` transient collective failures: the
+  engine discards the failed step's (uncommitted, functional) results and
+  re-issues it, counting the retry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+REVOKE = "revoke"
+RESTORE = "restore"
+QUOTA_CUT = "quota_cut"
+QUOTA_RESTORE = "quota_restore"
+COLLECTIVE_FAILURE = "collective_failure"
+
+KINDS = (REVOKE, RESTORE, QUOTA_CUT, QUOTA_RESTORE, COLLECTIVE_FAILURE)
+
+# kinds that take capacity OUT (pressure on) vs give it BACK (pressure off)
+PRESSURE_ON = (REVOKE, QUOTA_CUT)
+PRESSURE_OFF = (RESTORE, QUOTA_RESTORE)
+
+
+@dataclass(frozen=True)
+class CapacityEvent:
+    """One scripted capacity incident, keyed by the driver's step counter."""
+    kind: str
+    step: int                          # driver step at which the notice lands
+    count: int = 0                     # devices to revoke / failures to inject
+    devices: Tuple[int, ...] = ()      # explicit device ids (overrides count)
+    quanta: int = 0                    # pool-quanta size of a quota cut
+    deadline_steps: int = 0            # grace: revocation effective at
+                                       # step + deadline_steps (0 = immediate)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert self.step >= 0 and self.deadline_steps >= 0, self
+
+
+class FaultInjector:
+    """Deterministic, seedable capacity-event schedule.
+
+    Drivers poll ``due(step)`` once per loop iteration; every event whose
+    ``step`` has arrived is handed back exactly once, in (step, schedule
+    order). ``parse`` builds a schedule from the compact CLI grammar used by
+    ``launch/serve.py`` and ``launch/train.py``::
+
+        revoke@20:2        revoke 2 devices at step 20 (immediate)
+        revoke@20+5:2      same, with a 5-step grace deadline
+        restore@60         restore every revoked device at step 60
+        quota_cut@10:3     cut 3 pool quanta at step 10
+        quota_restore@40   lift the quota cut
+        fail@15:2          2 transient collective failures from step 15
+
+    ``random_script`` derives a reproducible paired revoke/restore schedule
+    from a seed — the chaos-smoke generator.
+    """
+
+    def __init__(self, events: Sequence[CapacityEvent] = ()):
+        self._events: List[CapacityEvent] = []
+        self._seq: List[int] = []      # schedule order (stable tie-break)
+        self.delivered: List[CapacityEvent] = []
+        for ev in events:
+            self.schedule(ev)
+
+    def schedule(self, ev: CapacityEvent) -> None:
+        self._events.append(ev)
+        self._seq.append(len(self._seq))
+
+    def pending(self) -> int:
+        return len(self._events)
+
+    def due(self, step: int) -> List[CapacityEvent]:
+        """Pop (in schedule-stable step order) every event now due."""
+        take = sorted((i for i, ev in enumerate(self._events)
+                       if ev.step <= step),
+                      key=lambda i: (self._events[i].step, self._seq[i]))
+        out = [self._events[i] for i in take]
+        for i in sorted(take, reverse=True):
+            del self._events[i]
+            del self._seq[i]
+        self.delivered.extend(out)
+        return out
+
+    _ALIASES = {"fail": COLLECTIVE_FAILURE, COLLECTIVE_FAILURE:
+                COLLECTIVE_FAILURE, **{k: k for k in KINDS}}
+
+    @classmethod
+    def parse(cls, script: str) -> "FaultInjector":
+        events = []
+        for part in filter(None, (p.strip() for p in script.split(","))):
+            head, _, arg = part.partition(":")
+            kind, _, when = head.partition("@")
+            assert kind in cls._ALIASES, f"unknown event kind {kind!r}"
+            kind = cls._ALIASES[kind]
+            step, _, grace = when.partition("+")
+            k = int(arg) if arg else 0
+            events.append(CapacityEvent(
+                kind, int(step),
+                count=k if kind in (REVOKE, COLLECTIVE_FAILURE) else 0,
+                quanta=k if kind == QUOTA_CUT else 0,
+                deadline_steps=int(grace) if grace else 0))
+        return cls(events)
+
+    @classmethod
+    def random_script(cls, *, n_rounds: int, max_step: int, n_devices: int,
+                      seed: int = 0, deadline_steps: int = 2
+                      ) -> "FaultInjector":
+        """Seed-deterministic paired revoke/restore rounds: each round
+        revokes 1..n_devices//2 devices at a random step and restores them
+        at a later one. Same seed, same script — chaos is replayable."""
+        rng = np.random.default_rng(seed)
+        events = []
+        slots = sorted(rng.choice(max(max_step, 2 * n_rounds),
+                                  size=2 * n_rounds, replace=False))
+        for r in range(n_rounds):
+            k = int(rng.integers(1, max(n_devices // 2, 1) + 1))
+            events.append(CapacityEvent(REVOKE, int(slots[2 * r]), count=k,
+                                        deadline_steps=deadline_steps))
+            events.append(CapacityEvent(RESTORE, int(slots[2 * r + 1])))
+        return cls(events)
+
+
+# ------------------------------------------------------------ mesh shrink --
+
+# axes that carry batch/sequence work and may shrink under revocation; every
+# other axis (``model`` above all) is pinned — weight dims divide it, so
+# shrinking it would invalidate every parameter sharding
+BATCH_AXES = ("pod", "data")
+
+
+def pick_revoked(mesh, count: int, already=()) -> Tuple[int, ...]:
+    """Deterministic device choice for a ``count``-only revocation: the
+    highest-ordinal devices of the mesh not already revoked — the tail of
+    the batch-axis split, so survivors stay a contiguous prefix (the same
+    contiguous split GSPMD and the slot-affinity pool use)."""
+    ids = sorted(int(d.id) for d in np.asarray(mesh.devices).ravel()
+                 if int(d.id) not in set(already))
+    return tuple(ids[len(ids) - count:]) if count else ()
+
+
+def surviving_mesh(mesh, revoked, *, prefer_divisor_of: int = 0):
+    """(new_mesh, reason) — the largest rectangular mesh over the surviving
+    devices.
+
+    Model-parallel axes keep their size (weights are sharded over them);
+    batch axes shrink, outermost first. When ``prefer_divisor_of`` is set
+    (the engine passes ``batch_slots``), a smaller batch-axis size that
+    divides it is preferred over a larger one that does not — keeping the
+    slot-affinity fast path alive beats keeping spare devices busy on the
+    gather fallback. Returns ``(None, reason)`` when not even the pinned
+    axes fit the survivors (callers fall back to single-device / replicated
+    execution)."""
+    import jax
+
+    if mesh is None:
+        return None, "no mesh to shrink"
+    revoked = {int(r) for r in revoked}
+    survivors = [d for d in sorted(np.asarray(mesh.devices).ravel(),
+                                   key=lambda d: int(d.id))
+                 if int(d.id) not in revoked]
+    if not revoked:
+        return mesh, "nothing revoked"
+    axes = list(mesh.axis_names)
+    sizes = {a: int(mesh.shape[a]) for a in axes}
+    pinned = int(np.prod([sizes[a] for a in axes if a not in BATCH_AXES]))
+    if pinned > len(survivors):
+        return None, (f"{len(survivors)} survivors cannot carry the pinned "
+                      f"model axes (need {pinned})")
+    batch = [a for a in axes if a in BATCH_AXES]
+    new_sizes = dict(sizes)
+    budget = len(survivors) // pinned      # total batch-axis capacity left
+    # shrink outermost batch axis first; inner ones only if still over budget
+    for ai, a in enumerate(batch):
+        inner = int(np.prod([new_sizes[b] for b in batch[ai + 1:]] or [1]))
+        cap = max(budget // inner, 1)
+        n = min(sizes[a], cap)
+        if prefer_divisor_of:
+            div = max((d for d in range(1, n + 1)
+                       if prefer_divisor_of % d == 0), default=1)
+            # a dividing size keeps the slot-affinity plan; only fall back
+            # to the non-dividing maximum when dividing costs > half of it
+            n = div if div * 2 >= n else n
+        new_sizes[a] = n
+        budget //= n * max(inner // int(np.prod(
+            [sizes[b] for b in batch[ai + 1:]] or [1])), 1) or 1
+        budget = (len(survivors) // pinned) // int(np.prod(
+            [new_sizes[b] for b in batch[: ai + 1]]))
+    need = pinned * int(np.prod([new_sizes[a] for a in batch] or [1]))
+    assert need <= len(survivors), (new_sizes, len(survivors))
+    shape = tuple(new_sizes[a] for a in axes)
+    dev = np.asarray(survivors[:need]).reshape(shape)
+    reason = (f"{need} of {len(survivors)} survivors as "
+              + "x".join(str(s) for s in shape))
+    return jax.sharding.Mesh(dev, tuple(axes)), reason
+
+
+# ----------------------------------------------------------- live reshard --
+
+def host_stage(tree):
+    """Pull a (possibly sharded) pytree to host numpy — the first half of
+    every elastic move: once staged, the source devices may disappear."""
+    import jax
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def reshard_live(tree, shardings=None):
+    """Mid-flight elastic reshard: the checkpoint-restore path without the
+    disk round-trip. Host-stages ``tree`` and re-``device_put``s it with
+    ``shardings`` (None = default placement on the current backend). Works
+    across arbitrary source/target meshes because the staged copy is
+    unsharded-logical, exactly like ``ckpt.restore``."""
+    import jax
+    staged = host_stage(tree)
+    if shardings is None:
+        return jax.tree.map(jax.device_put, staged)
+    return jax.device_put(staged, shardings)

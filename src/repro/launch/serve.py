@@ -93,6 +93,13 @@ def main(argv=None):
     p.add_argument("--qos-guard", type=float, default=0.25,
                    help="guard band: burst admission chunks only while "
                         "monitor p99 <= (1 - guard) * QoS target")
+    p.add_argument("--chaos", default="",
+                   help="capacity-event script for the fault injector, "
+                        "e.g. 'revoke@20+4:2,restore@60' (dist.elastic "
+                        "grammar: kind@step[+grace][:count])")
+    p.add_argument("--admission-timeout", type=float, default=0.0,
+                   help="reject a queued request after waiting this many "
+                        "seconds without admission (0 = wait forever)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -128,9 +135,16 @@ def main(argv=None):
                       paged=args.paged, page_size=args.page_size,
                       n_pages=args.pool_pages,
                       max_admission_chunks=args.max_admission_chunks,
-                      qos_guard=args.qos_guard)
+                      qos_guard=args.qos_guard,
+                      admission_timeout_s=args.admission_timeout)
     print(f"dispatch: {eng.explain_dispatch()}")
     print(f"dispatch: {eng.explain_prefill_dispatch()}")
+    injector = None
+    if args.chaos:
+        from repro.dist import elastic
+        injector = elastic.FaultInjector.parse(args.chaos)
+        print(f"chaos: {injector.pending()} scripted capacity events "
+              f"({args.chaos})")
     if args.variant is not None:
         eng.set_variant(names.index(args.variant))
 
@@ -145,12 +159,17 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     nxt, steps = 0, 0
-    while not all(r.done for r in reqs) and steps < 100_000:
+    while not all(r.done or r.rejected for r in reqs) and steps < 100_000:
         now = time.perf_counter() - t0
         while nxt < len(reqs) and arrivals[nxt] <= now:
             reqs[nxt].t_arrival = t0 + arrivals[nxt]
             eng.submit(reqs[nxt])
             nxt += 1
+        if injector is not None:
+            for ev in injector.due(steps):
+                print(f"chaos@{steps}: {ev.kind} count={ev.count} "
+                      f"quanta={ev.quanta} grace={ev.deadline_steps}")
+                eng.inject(ev)
         if eng.idle:                 # queue, in-flight admission, slots all empty
             if nxt < len(reqs):      # open loop: idle until the next arrival
                 time.sleep(min(arrivals[nxt] - now, 0.01))
@@ -211,6 +230,20 @@ def main(argv=None):
         acts = [h["action"] for h in runtime.history if h["action"] != "hold"]
         print(f"qos: target={1e3 * args.qos_target:.1f}ms "
               f"violation_rate={viol:.3f} swaps={eng.swaps} actions={acts}")
+    if args.chaos or args.admission_timeout > 0:
+        s = eng.stats
+        rehomes = [e for e in eng.elastic_log if "mesh_shape" in e]
+        print(f"elastic: events={s['capacity_events']} "
+              f"rehomes={s['rehomes']} "
+              f"collective_retries={s['collective_retries']} "
+              f"recovery_steps={[e['recovery_steps'] for e in rehomes]} "
+              f"rejected={len(eng.rejected)} "
+              f"timeouts={s['admission_timeouts']} "
+              f"backoff_skips={s['backoff_skips']}")
+        for r in eng.rejected:
+            rej = r.rejection
+            print(f"  rejected uid={rej.uid} waited={rej.waited_s:.3f}s "
+                  f"queue_depth={rej.queue_depth} step={rej.step}")
     return 0
 
 

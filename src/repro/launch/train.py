@@ -63,6 +63,11 @@ def main(argv=None):
                         "sync_period/grad_compress knobs exercise the real "
                         "cross-pod collectives (needs >=2 devices, e.g. "
                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    p.add_argument("--chaos", default="",
+                   help="capacity-event script for the fault injector, e.g. "
+                        "'revoke@40:2,restore@120' — revocations live-shrink "
+                        "the train mesh (mid-flight optimizer-state reshard "
+                        "+ variant recompile), restores grow it back")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -91,9 +96,58 @@ def main(argv=None):
     # the train job as a first-class Tenant (no elastic reshard actuator on
     # a single host, so its quanta budget is 0 — variant knob only); the
     # same tenant drops into launch/colocate.py's multi-tenant arbiter
-    runtime = PliantRuntime(monitor=monitor,
-                            tenants=[TrainTenant(table, name="train")])
+    tenant = TrainTenant(table, name="train")
+    runtime = PliantRuntime(monitor=monitor, tenants=[tenant])
     runtime.cfg.decision_interval_s = args.decision_interval
+
+    # --chaos: TrainTenant live shrink — the checkpoint-time elastic reshard
+    # (save unsharded-logical, re-device_put on any mesh) applied MID-FLIGHT
+    # to (params, optimizer state), without the disk round-trip, plus a
+    # variant-table recompile on the surviving mesh
+    chaos = None
+    live = {"params": None, "opt": None, "mesh": mesh, "lost": set()}
+    if args.chaos:
+        from repro.dist import elastic
+        chaos = elastic.FaultInjector.parse(args.chaos)
+        base_mesh = mesh
+
+        def on_capacity(ev):
+            if ev.kind == elastic.REVOKE:
+                if base_mesh is None:
+                    print("chaos: revoke ignored (single device, no mesh)")
+                    return
+                ids = ev.devices or elastic.pick_revoked(
+                    base_mesh, ev.count, already=tuple(live["lost"]))
+                live["lost"].update(ids)
+            elif ev.kind == elastic.RESTORE:
+                if ev.devices:
+                    live["lost"].difference_update(ev.devices)
+                else:
+                    live["lost"].clear()
+            else:
+                return      # quota/collective events: pressure-only here
+            if live["lost"]:
+                new_mesh, why = elastic.surviving_mesh(base_mesh,
+                                                       live["lost"])
+                if new_mesh is None:
+                    print(f"chaos: cannot shrink ({why}) — degrading via "
+                          "the variant ladder only")
+                    return
+            else:
+                new_mesh, why = base_mesh, "full mesh restored"
+            t = time.time()
+            live["params"], live["opt"] = elastic.reshard_live(
+                (live["params"], live["opt"]))
+            build_variant_steps(cfg, table, opt_cfg, mesh=new_mesh)
+            live["mesh"] = new_mesh
+            shape_s = "1x1" if new_mesh is None else \
+                "x".join(str(v) for v in new_mesh.shape.values())
+            print(f"chaos: resharded (params+opt) onto {shape_s} in "
+                  f"{time.time() - t:.2f}s ({why}; lost={sorted(live['lost'])})")
+
+        tenant.elastic_fn = on_capacity
+        print(f"chaos: {chaos.pending()} scripted capacity events "
+              f"({args.chaos})")
 
     data_cfg = DataConfig(cfg.vocab_size, args.seq, args.batch,
                           seed=args.seed)
@@ -114,6 +168,15 @@ def main(argv=None):
     svc = SERVICES["token-serve"]
     t0 = time.time()
     for i in range(start_step, args.steps):
+        if chaos is not None:
+            due = chaos.due(i)
+            if due:
+                live["params"], live["opt"] = params, opt
+                for ev in due:
+                    print(f"chaos@{i}: {ev.kind} count={ev.count} "
+                          f"quanta={ev.quanta}")
+                    runtime.inject(ev)
+                params, opt = live["params"], live["opt"]
         step_idx, tokens = next(prefetch)
         batch = {"tokens": jnp.asarray(tokens)}
         if cfg.family == "encdec":
@@ -134,7 +197,7 @@ def main(argv=None):
                 and (i + 1) % active_knobs.sync_period == 0:
             # sync-elision knob: the step carries no cross-pod collectives;
             # the driver syncs params every k steps (no-op without a pod axis)
-            params = step_mod.pod_sync(params, mesh)
+            params = step_mod.pod_sync(params, live["mesh"])
         if args.pliant:
             # synthetic contention trace: mid-run interference burst on the
             # colocated interactive service

@@ -70,9 +70,10 @@ from __future__ import annotations
 import collections
 import contextlib
 import functools
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,7 @@ from repro.configs.base import LOCAL_ATTN, MAMBA, ModelConfig, ShapeConfig
 from repro.core import tenant as tenant_mod
 from repro.core.runtime import PliantRuntime
 from repro.core.variants import VariantTable
+from repro.dist import elastic
 from repro.models import lm
 from repro.models.attention import PagedKVCache
 from repro.models.mamba2 import MambaCache
@@ -99,11 +101,27 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     t_arrival: float = 0.0    # driver-set (open-loop client)
+    t_enqueue: float = 0.0    # stamped by submit(): admission-timeout clock
     t_admit_start: float = 0.0  # first prefill chunk issued (queue-wait ends)
     t_admit: float = 0.0      # admission COMPLETION (prefill done, slot live)
     admit_compute_s: float = 0.0  # pure prefill executable time (no queueing,
                                   # no interleaved decode steps)
     token_times: List[float] = field(default_factory=list)
+    rejected: bool = False    # structured rejection (never silently dropped)
+    rejection: Optional["AdmissionTimeout"] = None
+
+
+@dataclass(frozen=True)
+class AdmissionTimeout:
+    """Structured admission rejection: the request waited in the queue past
+    the engine's ``admission_timeout_s`` bound without ever fitting the pool.
+    Attached to ``Request.rejection``, collected on ``engine.rejected``, and
+    counted in ``engine.stats`` — a rejection is an explicit, attributable
+    outcome, never a request that silently vanished under pressure."""
+    uid: int
+    waited_s: float
+    queue_depth: int       # pending queue length at rejection time
+    step: int              # engine step at which the timeout fired
 
 
 @dataclass
@@ -158,6 +176,14 @@ class ServeEngine:
                                        # headroom says bursting is safe)
     qos_guard: float = 0.25            # guard band: burst only while monitor
                                        # p99 <= (1 - guard) * QoS target
+    admission_timeout_s: float = 0.0   # 0 = wait forever; > 0 = reject a
+                                       # never-admitted request after this
+                                       # long with a structured
+                                       # AdmissionTimeout (engine.rejected)
+    backoff_base: int = 1              # steps before retrying a pool-blocked
+    backoff_cap: int = 8               # request; doubles per failure, capped
+    background_compile: bool = True    # AOT-compile surviving-mesh decode
+                                       # during a revocation's grace window
 
     def __post_init__(self):
         if self.runtime is not None:
@@ -168,29 +194,14 @@ class ServeEngine:
         self.pool: Optional[pages_mod.PagePool] = None
         self._page_spec = None
         self.stores: List[pages_mod.CacheStore] = []
-        # slot-affinity decode plan: decided ONCE from (cfg, mesh, slots)
-        # and honored by pool sizing, cache placement, and the traced step
-        self._decode_plan, self._plan_reason = None, "single device"
-        if self.paged and self.mesh is not None:
-            from repro.dist import sharding as dist_sharding
-            self._decode_plan, self._plan_reason = \
-                dist_sharding.paged_decode_plan(
-                    self.cfg, self.mesh, self.batch_slots, self.n_pages)
-        # ring-prefill sequence plan: decided ONCE from (cfg, mesh,
-        # prefill_chunk) — the same pure function the traced admission cells
-        # re-derive per chunk length (ragged final chunks may differ)
-        self._prefill_plan, self._prefill_reason = None, "single device"
-        if self.mesh is not None:
-            from repro.dist import sharding as dist_sharding
-            self._prefill_plan, self._prefill_reason = \
-                dist_sharding.prefill_plan(self.cfg, self.mesh,
-                                           self.prefill_chunk)
+        # greedy paged engines fuse argmax into the decode executable: the
+        # step returns (B,) token ids, so the host never pulls (B, V) logits
+        self._fused_sample = bool(self.paged and self.temperature <= 0.0)
+        self._derive_plans()
         if self.paged:
-            n_shards = (self._decode_plan.n_shards
-                        if self._decode_plan is not None else 1)
             self._page_spec = pages_mod.spec_for(
                 self.batch_slots, self.max_len, self.page_size, self.n_pages,
-                n_shards=n_shards)
+                n_shards=self._plan_shards())
             self.pool = pages_mod.PagePool(self._page_spec, self.batch_slots)
             # one store per cache kind behind the shared CacheStore protocol:
             # the page pool for attention state, the trivial per-slot store
@@ -198,15 +209,8 @@ class ServeEngine:
             self.stores = [self.pool]
             if MAMBA in self.cfg.pattern:
                 self.stores.append(pages_mod.MambaSlotStore())
-        self._param_sh = self._cache_sh = None
-        if self.mesh is not None:
-            from repro.dist import sharding as dist_sharding
-            self._param_sh = dist_sharding.param_shardings(
-                self.cfg, self.mesh, self.policy)
-            shp = ShapeConfig("serve", self.max_len, self.batch_slots,
-                              "decode")
-            self._cache_sh, _ = dist_sharding.cache_shardings(
-                self.cfg, shp, self.mesh, paged=self._page_spec)
+        self._derive_shardings()
+        if self._param_sh is not None:
             with self._ctx():
                 self.params = jax.device_put(self.params, self._param_sh)
 
@@ -220,22 +224,9 @@ class ServeEngine:
         # pool when the decode plan allows; otherwise the attention layer
         # takes the GSPMD gather path and logs why (attention.explain_
         # dispatch reports the decision up front).
-        # greedy paged engines fuse argmax into the decode executable: the
-        # step returns (B,) token ids, so the host never pulls (B, V) logits
-        self._fused_sample = bool(self.paged and self.temperature <= 0.0)
-        if self.paged:
-            mk = functools.partial(
-                step_mod.make_paged_serve_step,
-                mesh=self.mesh,
-                use_kernel=self.use_kernel,
-                interpret=self.kernel_interpret,
-                dynamic_scatter=self.mesh is None,
-                sample_greedy=self._fused_sample)
-        else:
-            mk = step_mod.make_serve_step
-        self._decodes = {
-            i: self._lower_decode(mk(self.cfg, k))
-            for i, k in enumerate(self._variant_knobs)}
+        self._decodes: Dict[int, object] = {
+            i: None for i in range(len(self._variant_knobs))}
+        self._build_decodes()
         # admission executables, keyed by (knobs, chunk len, paged) — NOT by
         # variant index, so table entries with identical admission knobs
         # share one compiled chunk cell — and LRU-bounded
@@ -267,6 +258,23 @@ class ServeEngine:
         # continuous batching reproduces the wave-scheduled token streams
         self._rngs: Dict[int, np.random.Generator] = {}
         self._pending_variant: Optional[int] = None
+        # ---- elasticity / fault state (dist.elastic) ----
+        self.step_count = 0
+        self._base_mesh = self.mesh          # full-capacity mesh (restore)
+        self._revoked: Set[int] = set()      # device ids currently revoked
+        self._pending_capacity: List[Tuple[int, object]] = []  # (due, event)
+        self._collective_failures = 0        # queued transient step failures
+        self._recovering: List[dict] = []    # rehome entries awaiting first
+                                             # completed decode step
+        self.elastic_log: List[dict] = []
+        self._prepared: Dict[Tuple, object] = {}   # AOT-compiled decodes for
+        self._compile_threads: List[threading.Thread] = []  # a pending mesh
+        # admission backoff/timeout state
+        self._backoff: Dict[int, Tuple[int, int]] = {}  # uid -> (retry, dly)
+        self.rejected: List[Request] = []
+        self.stats: Dict[str, int] = dict(
+            admission_timeouts=0, backoff_skips=0, collective_retries=0,
+            capacity_events=0, rehomes=0)
         self._tenant = None
         self._bound = False
         if (self.runtime is not None and self.runtime.auto_tenant
@@ -281,6 +289,75 @@ class ServeEngine:
             self._tenant = tenant_mod.ServeTenant(engine=self)
             self.runtime.bind(self._tenant)
             self._bound = True
+
+    # ------------------------------------------------------------- layout --
+    # Every mesh-dependent decision is (re)derived by the helpers below —
+    # at construction AND again by ``_rehome`` when a capacity event changes
+    # the mesh. Nothing about the layout is cached anywhere else.
+
+    def _derive_plans(self) -> None:
+        """Slot-affinity decode plan + ring-prefill sequence plan, decided
+        from (cfg, CURRENT mesh, slots/chunk) by the pure plan functions the
+        traced steps re-derive — no side channel."""
+        self._decode_plan, self._plan_reason = None, "single device"
+        self._prefill_plan, self._prefill_reason = None, "single device"
+        if self.mesh is None:
+            return
+        from repro.dist import sharding as dist_sharding
+        if self.paged:
+            self._decode_plan, self._plan_reason = \
+                dist_sharding.paged_decode_plan(
+                    self.cfg, self.mesh, self.batch_slots, self.n_pages)
+        self._prefill_plan, self._prefill_reason = \
+            dist_sharding.prefill_plan(self.cfg, self.mesh,
+                                       self.prefill_chunk)
+
+    def _plan_shards(self) -> int:
+        return (self._decode_plan.n_shards
+                if self._decode_plan is not None else 1)
+
+    def _derive_shardings(self) -> None:
+        self._param_sh = self._cache_sh = None
+        if self.mesh is None:
+            return
+        from repro.dist import sharding as dist_sharding
+        self._param_sh = dist_sharding.param_shardings(
+            self.cfg, self.mesh, self.policy)
+        shp = ShapeConfig("serve", self.max_len, self.batch_slots, "decode")
+        self._cache_sh, _ = dist_sharding.cache_shardings(
+            self.cfg, shp, self.mesh, paged=self._page_spec)
+
+    def _decode_builder(self):
+        if self.paged:
+            return functools.partial(
+                step_mod.make_paged_serve_step,
+                mesh=self.mesh,
+                use_kernel=self.use_kernel,
+                interpret=self.kernel_interpret,
+                dynamic_scatter=self.mesh is None,
+                sample_greedy=self._fused_sample)
+        return step_mod.make_serve_step
+
+    def _mesh_key(self, mesh) -> Tuple:
+        if mesh is None:
+            return ("1x1",)
+        return (tuple(sorted(mesh.shape.items())),
+                tuple(int(d.id) for d in np.asarray(mesh.devices).ravel()))
+
+    def _build_decodes(self) -> None:
+        """(Re)lower the decode executable of every REGISTERED variant
+        against the current mesh/shardings (retired variants stay retired).
+        jit is lazy, so rebuilding the whole dict costs wrapper setup only —
+        compilation happens at each variant's first post-(re)build call,
+        except where ``_prepared`` holds an AOT executable background-
+        compiled during a revocation grace window."""
+        mk = self._decode_builder()
+        mkey = self._mesh_key(self.mesh)
+        prepared = getattr(self, "_prepared", {})   # post-init ordering
+        self._decodes = {
+            i: (prepared.pop((mkey, i), None)
+                or self._lower_decode(mk(self.cfg, self._variant_knobs[i])))
+            for i in self._decodes}
 
     # ----------------------------------------------------------- dispatch --
 
@@ -496,7 +573,271 @@ class ServeEngine:
         return np.minimum(idx, logits.shape[-1] - 1)
 
     def submit(self, req: Request) -> None:
+        req.t_enqueue = req.t_enqueue or time.perf_counter()
         self.pending.append(req)
+
+    # ---------------------------------------------------------- elasticity --
+
+    def inject(self, ev, *, notify_runtime: bool = True) -> None:
+        """Entry point for a ``dist.elastic.CapacityEvent`` (fault injector,
+        driver, or tenant adapter). A revocation with a grace deadline is
+        deferred to ``step + deadline_steps``: through the grace window the
+        engine keeps serving on the doomed mesh while the runtime — notified
+        here — treats the pending loss as contention (the variant ladder
+        degrades through the normal Fig. 3 loop instead of traffic being
+        rejected) and the surviving-mesh executables start compiling in the
+        background. Everything else applies at the next step boundary.
+        ``notify_runtime=False`` is for tenant adapters whose runtime
+        already saw the event (``PliantRuntime.inject`` fans out both
+        ways)."""
+        self.stats["capacity_events"] += 1
+        if notify_runtime and self.runtime is not None:
+            self.runtime.notify_capacity(ev)
+        due = self.step_count
+        if ev.kind == elastic.REVOKE and ev.deadline_steps > 0:
+            due += ev.deadline_steps
+            self.elastic_log.append(dict(
+                step=self.step_count, kind="revoke_notice", count=ev.count,
+                devices=list(ev.devices), deadline_step=due))
+            if self.background_compile and self.paged \
+                    and self._base_mesh is not None:
+                self._precompile_async(ev)
+        self._pending_capacity.append((due, ev))
+
+    def _process_capacity(self) -> None:
+        """Apply every capacity event whose (grace) deadline has arrived —
+        called at the top of ``step()``, so cutovers happen at step
+        boundaries only."""
+        if not self._pending_capacity:
+            return
+        due = [e for s, e in self._pending_capacity if s <= self.step_count]
+        self._pending_capacity = [(s, e) for s, e in self._pending_capacity
+                                  if s > self.step_count]
+        for ev in due:
+            self._apply_capacity(ev)
+
+    def _apply_capacity(self, ev) -> None:
+        entry = dict(step=self.step_count, kind=ev.kind)
+        if ev.kind in (elastic.REVOKE, elastic.RESTORE):
+            if self._base_mesh is None:
+                # single-device engine: no mesh to shrink — the event still
+                # flowed to the runtime as pressure, which is all it can mean
+                entry["ignored"] = "no mesh"
+                self.elastic_log.append(entry)
+                return
+            if ev.kind == elastic.REVOKE:
+                ids = ev.devices or elastic.pick_revoked(
+                    self.mesh if self.mesh is not None else self._base_mesh,
+                    ev.count, already=self._revoked)
+                self._revoked |= {int(i) for i in ids}
+            else:
+                self._revoked -= ({int(i) for i in ev.devices}
+                                  if ev.devices else set(self._revoked))
+            new_mesh, why = elastic.surviving_mesh(
+                self._base_mesh, self._revoked,
+                prefer_divisor_of=self.batch_slots)
+            entry.update(self._rehome(new_mesh, why))
+            entry["revoked"] = sorted(self._revoked)
+            self._recovering.append(entry)
+        elif ev.kind == elastic.QUOTA_CUT:
+            if self.pool is not None:
+                self.pool.set_capacity_cut(self.pool.capacity_cut + ev.quanta)
+                entry["capacity_cut"] = self.pool.capacity_cut
+        elif ev.kind == elastic.QUOTA_RESTORE:
+            if self.pool is not None:
+                cut = (self.pool.capacity_cut - ev.quanta if ev.quanta else 0)
+                self.pool.set_capacity_cut(max(cut, 0))
+                entry["capacity_cut"] = self.pool.capacity_cut
+        elif ev.kind == elastic.COLLECTIVE_FAILURE:
+            self._collective_failures += max(ev.count, 1)
+            entry["queued_failures"] = self._collective_failures
+        self.elastic_log.append(entry)
+
+    def _rehome(self, new_mesh, why: str = "") -> dict:
+        """Cut the LIVE engine over to ``new_mesh`` (shrink on revocation,
+        grow on restore) without dropping anything. All durable decode state
+        is mesh-shape-independent — (pool, caches, positions, cur_tokens,
+        admission chunk cursors) — only WHERE the arrays live changes:
+
+        1. re-derive the layout plans/shardings for the new mesh (the same
+           pure functions construction uses; an infeasible plan degrades
+           loudly to the gather/unsharded path, it never corrupts);
+        2. migrate the page pool (``PagePool.migrate``: live pages re-homed
+           onto their slots' new affinity shards, prefix entries evicted)
+           and permute the host-staged device caches to match;
+        3. re-put params under the new shardings (host-staged — the revoked
+           devices may be gone);
+        4. rebuild the decode executables (AOT background-compiled ones are
+           picked up when ready; the rest compile lazily at first call) and
+           drop the admission-cell LRU — in-flight ``_Admission``s simply
+           resume at their chunk cursor on the new mesh."""
+        t0 = time.perf_counter()
+        # in-flight admission logits live on the old mesh — host-stage them
+        for adm in self._admissions.values():
+            if adm.logits is not None:
+                adm.logits = np.asarray(adm.logits)
+        old_shards = self._plan_shards() if self.paged else 1
+        self.mesh = new_mesh
+        self._derive_plans()
+        migrated = 0
+        if self.paged:
+            new_spec = pages_mod.spec_for(
+                self.batch_slots, self.max_len, self.page_size, self.n_pages,
+                n_shards=self._plan_shards())
+            new_pool, perm = self.pool.migrate(new_spec)
+            self._page_spec = new_spec
+            self._derive_shardings()
+            self.caches = self._migrate_paged_caches(perm, new_pool)
+            self.pool = new_pool
+            self.stores[0] = new_pool
+            migrated = int((perm >= 0).sum())
+        else:
+            self._derive_shardings()
+            with self._ctx():
+                self.caches = elastic.reshard_live(self.caches,
+                                                   self._cache_sh)
+        with self._ctx():
+            self.params = elastic.reshard_live(self.params, self._param_sh)
+        self._build_decodes()
+        self._prefills.clear()
+        self.stats["rehomes"] += 1
+        return dict(
+            step_index=len(self.step_latencies), why=why,
+            mesh_shape=(dict(new_mesh.shape) if new_mesh is not None
+                        else None),
+            n_shards=(old_shards, self._plan_shards() if self.paged else 1),
+            pages_migrated=migrated,
+            cutover_s=time.perf_counter() - t0,
+            recovery_steps=None, _t_rehome=t0)
+
+    def _migrate_paged_caches(self, perm: np.ndarray, new_pool):
+        """Host-stage the old device caches and permute the physical-page
+        axis into the new pool's layout: ``perm[new_pid] = old_pid`` source
+        (-1 = starts empty — zero KV, -1 positions, masked out of
+        attention). Leaves are group-stacked, so the page dim is axis 1;
+        Mamba rows are slot-major and pass through unchanged. The staged
+        copy is the only surviving reference once the old devices go."""
+        dst = np.flatnonzero(perm >= 0)
+        src = perm[dst]
+        bt = np.asarray(new_pool.blocks)
+
+        def move(x, fill):
+            x = np.asarray(jax.device_get(x))
+            out = np.full((x.shape[0], new_pool.spec.n_pages) + x.shape[2:],
+                          fill, x.dtype)
+            out[:, dst] = x[:, src]
+            return out
+
+        caches = []
+        for c in self.caches:
+            if isinstance(c, PagedKVCache):
+                caches.append(PagedKVCache(
+                    kp=move(c.kp, 0), vp=move(c.vp, 0),
+                    ppos=move(c.ppos, -1),
+                    block=np.broadcast_to(
+                        bt[None], (np.shape(c.block)[0],) + bt.shape).copy()))
+            else:
+                caches.append(elastic.host_stage(c))
+        caches = tuple(caches)
+        with self._ctx():
+            if self._cache_sh is not None:
+                return jax.device_put(caches, self._cache_sh)
+            return jax.tree.map(jnp.asarray, caches,
+                                is_leaf=lambda x: isinstance(x, np.ndarray))
+
+    def _precompile_async(self, ev) -> None:
+        """Best-effort AOT compile of the ACTIVE variant's decode executable
+        for the mesh that survives ``ev``, on a background thread during the
+        revocation grace window — the cutover's first step then skips the
+        full compile. Any failure just falls back to lazy compilation at
+        cutover; correctness never depends on this racing to finish."""
+        lost = self._revoked | set(ev.devices or elastic.pick_revoked(
+            self.mesh if self.mesh is not None else self._base_mesh,
+            ev.count, already=self._revoked))
+        new_mesh, _ = elastic.surviving_mesh(
+            self._base_mesh, lost, prefer_divisor_of=self.batch_slots)
+        if new_mesh is None:
+            return
+        variant = self._active
+        key = (self._mesh_key(new_mesh), variant)
+        if key in self._prepared:
+            return
+
+        def compile_target():
+            try:
+                from repro.dist import sharding as dist_sharding
+                plan, _ = dist_sharding.paged_decode_plan(
+                    self.cfg, new_mesh, self.batch_slots, self.n_pages)
+                spec = pages_mod.spec_for(
+                    self.batch_slots, self.max_len, self.page_size,
+                    self.n_pages,
+                    n_shards=plan.n_shards if plan is not None else 1)
+                psh = dist_sharding.param_shardings(self.cfg, new_mesh,
+                                                    self.policy)
+                shp = ShapeConfig("serve", self.max_len, self.batch_slots,
+                                  "decode")
+                csh, _ = dist_sharding.cache_shardings(
+                    self.cfg, shp, new_mesh, paged=spec)
+                step = step_mod.make_paged_serve_step(
+                    self.cfg, self._variant_knobs[variant], mesh=new_mesh,
+                    use_kernel=self.use_kernel,
+                    interpret=self.kernel_interpret, dynamic_scatter=False,
+                    sample_greedy=self._fused_sample)
+                sds = lambda t: jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(np.shape(x),
+                                                   np.asarray(x).dtype
+                                                   if not hasattr(x, "dtype")
+                                                   else x.dtype), t)
+                caches_abs = jax.eval_shape(functools.partial(
+                    lm.init_paged_caches, self.cfg, self.batch_slots,
+                    spec.n_pages, spec.page_size, spec.max_pages,
+                    dtype=self.cache_dtype,
+                    quantized=self._variant_knobs[variant].kv_quant))
+                B = self.batch_slots
+                exe = jax.jit(
+                    step, in_shardings=(psh, None, None, None, csh),
+                    out_shardings=(None, csh)
+                ).lower(
+                    sds(self.params),
+                    jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    jax.ShapeDtypeStruct((B,), jnp.int32),
+                    jax.ShapeDtypeStruct((B,), jnp.bool_),
+                    caches_abs,
+                ).compile()
+                self._prepared[key] = exe
+            except Exception as e:     # pragma: no cover - best effort
+                self.elastic_log.append(dict(
+                    step=self.step_count, kind="precompile_failed",
+                    error=repr(e)))
+
+        th = threading.Thread(target=compile_target, daemon=True)
+        self._compile_threads.append(th)
+        th.start()
+
+    def _expire_pending(self) -> None:
+        """Admission-timeout sweep: reject (structured, loud in stats) every
+        queued request that has waited past ``admission_timeout_s`` without
+        ever being admitted. In-flight admissions are never expired — they
+        are making progress by construction (chunked prefill advances every
+        budgeted step)."""
+        if self.admission_timeout_s <= 0 or not self.pending:
+            return
+        now = time.perf_counter()
+        keep: Deque[Request] = collections.deque()
+        for req in self.pending:
+            t0 = req.t_enqueue or req.t_arrival
+            if t0 and now - t0 > self.admission_timeout_s:
+                req.rejected = True
+                req.rejection = AdmissionTimeout(
+                    uid=req.uid, waited_s=now - t0,
+                    queue_depth=len(self.pending), step=self.step_count)
+                self.rejected.append(req)
+                self.stats["admission_timeouts"] += 1
+                self._backoff.pop(req.uid, None)
+                self._rngs.pop(req.uid, None)
+            else:
+                keep.append(req)
+        self.pending = keep
 
     # ------------------------------------------------------ paged plumbing --
 
@@ -645,6 +986,13 @@ class ServeEngine:
                     "max_len >= prompt + max_new"
                 if self._prefix_dedup_wait(req, self.pool.slot_shard(slot)):
                     continue       # sibling is mid-prefill of our prefix
+                bo = self._backoff.get(req.uid)
+                if bo is not None and self.step_count < bo[0]:
+                    # bounded backoff: a pool-blocked request sits out its
+                    # (exponentially grown, capped) window instead of
+                    # re-running the admit feasibility gate every step
+                    self.stats["backoff_skips"] += 1
+                    continue
                 # grouped/speculative allocation: reserve the decode pages
                 # up front (positions S .. S+max_new-2 are written) so the
                 # hot loop's ensure_decode_page never allocates. Banded
@@ -655,9 +1003,13 @@ class ServeEngine:
                 plan = self.pool.admit(slot, req.prompt, self.active_knobs,
                                        reserve_tokens=reserve)
                 if plan is None:
+                    delay = (min(bo[1] * 2, self.backoff_cap) if bo
+                             else max(self.backoff_base, 1))
+                    self._backoff[req.uid] = (self.step_count + delay, delay)
                     if qi == 0 and count_skips:
                         self._head_skips += 1
                     continue                 # over budget: try the next one
+                self._backoff.pop(req.uid, None)
                 if qi == 0:
                     self._head_skips = 0
                 del self.pending[qi]
@@ -834,6 +1186,9 @@ class ServeEngine:
         prompt never stalls the decoders for more than the chunk budget.
         Dense: legacy synchronous admission, then decode. Both tick the
         Pliant control loop at the step boundary."""
+        self.step_count += 1
+        self._process_capacity()   # deadline-reached capacity events cut
+        self._expire_pending()     # over first, at the step boundary
         if self.paged:
             self._advance_admissions()
         else:
@@ -862,16 +1217,31 @@ class ServeEngine:
             if self.paged:
                 act = jnp.asarray(
                     np.array([s is not None for s in self.slots]))
-                out, self.caches = self._decodes[self._active](
-                    self.params, toks, pos, act, self.caches)
+                args = (self.params, toks, pos, act, self.caches)
             else:
-                out, self.caches = self._decodes[self._active](
-                    self.params, toks, pos, self.caches)
+                args = (self.params, toks, pos, self.caches)
+            out, new_caches = self._decodes[self._active](*args)
+            while self._collective_failures > 0:
+                # injected transient collective failure: the functional
+                # step's results are discarded UNCOMMITTED (self.caches
+                # still holds the pre-step state) and the step re-issued —
+                # honest retry semantics, bounded by the injected count
+                self._collective_failures -= 1
+                self.stats["collective_retries"] += 1
+                out, new_caches = self._decodes[self._active](*args)
+            self.caches = new_caches
             # fused greedy: ``out`` is (B,) sampled token ids — B*4 bytes
             # off-device per step instead of the (B, V) logits matrix
             out = np.asarray(out)
         dt = time.perf_counter() - t0
         self.step_latencies.append(dt)
+        for entry in self._recovering:
+            # recovery = event application -> first COMPLETED decode step on
+            # the re-homed mesh (compile time of the cutover step included)
+            entry["recovery_steps"] = \
+                len(self.step_latencies) - entry["step_index"]
+            entry["recovery_s"] = time.perf_counter() - entry.pop("_t_rehome")
+        self._recovering.clear()
         now = time.perf_counter()
         rows = [i for i, req in enumerate(self.slots) if req is not None]
         if self._fused_sample:

@@ -170,6 +170,11 @@ class PagePool(CacheStore):
         self.index: Dict[tuple, PrefixEntry] = {}
         self.quantum = reclaim_quantum or spec.max_pages
         self.reclaimed = 0
+        # capacity cut (CapacityEvent QUOTA_CUT quanta): an EXTERNAL floor on
+        # the budget, deliberately separate from ``reclaimed`` — the Pliant
+        # arbiter's ledger must track only its own actuations, or a quota
+        # grab would desync it from the quanta it believes it can return
+        self.capacity_cut = 0
         self.scrub_pending: List[int] = []   # fully-freed pages: stale device
         self._clock = 0                      # ppos must be cleared before reuse
         self.stats: Dict[str, Any] = dict(
@@ -178,7 +183,8 @@ class PagePool(CacheStore):
             blocked_admissions=0, reclaim_events=0, over_limit_allocs=0,
             register_capped=0, peak_used=0, window_freed=0,
             grouped_admissions=0, grouped_pages=0, grouped_fallbacks=0,
-            replenish_evictions=0)
+            replenish_evictions=0, capacity_cut_events=0,
+            elastic_migrations=0, elastic_prefix_evicted=0)
 
     # --------------------------------------------------------- accounting --
 
@@ -201,7 +207,8 @@ class PagePool(CacheStore):
 
     @property
     def limit(self) -> int:
-        return max(self.spec.usable - self.reclaimed * self.quantum, 0)
+        return max(self.spec.usable
+                   - (self.reclaimed + self.capacity_cut) * self.quantum, 0)
 
     @property
     def max_quanta(self) -> int:
@@ -616,3 +623,75 @@ class PagePool(CacheStore):
         self.stats.setdefault("reclaim_log", []).append(dict(
             action="grow" if grow else "shrink", reclaimed=k,
             limit=self.limit, used=self.used, evicted=evicted))
+
+    def set_capacity_cut(self, k: int) -> None:
+        """Actuate a QUOTA_CUT/QUOTA_RESTORE capacity event: ``k`` quanta of
+        the pool are externally gone (a co-tenant's emergency grab), on top
+        of whatever the arbiter has reclaimed. Same semantics as
+        ``set_reclaimed`` — prefix entries evicted until under the new
+        budget, live pages untouchable — but tracked separately so the
+        Pliant ledger never has to account for quanta it did not take."""
+        k = max(0, int(k))
+        if k == self.capacity_cut:
+            return
+        self.capacity_cut = k
+        evicted = 0
+        while self.used > self.limit and self.index:
+            self._evict_lru()
+            evicted += 1
+        self.stats["capacity_cut_events"] += 1
+        self.stats.setdefault("capacity_log", []).append(dict(
+            capacity_cut=k, limit=self.limit, used=self.used,
+            evicted=evicted))
+
+    # ------------------------------------------------------------- elastic --
+
+    def migrate(self, spec: PageSpec) -> Tuple["PagePool", np.ndarray]:
+        """Re-home every live slot's pages into a FRESH pool laid out by
+        ``spec`` — the shard-count / pool-size change after a capacity event
+        re-derives the slot-affinity decode plan. Returns ``(new_pool,
+        perm)`` where ``perm[new_pid] = old_pid`` names the physical page
+        whose contents must be copied there (-1 = no source, the page starts
+        empty); the engine applies ``perm`` to the device-side page arrays.
+
+        Live slots keep their logical block layout bit-for-bit; only the
+        physical homes change, every page re-allocated on its slot's NEW
+        affinity shard. A page shared by several slots (prefix hit) is
+        duplicated — copy-on-write collapses to copies. Prefix-index entries
+        are EVICTED, never migrated: keys are shard-tagged chained hashes
+        and entries do not retain their tokens, so a re-homed entry could
+        not be re-keyed for its new shard — the loss is cold misses
+        (``stats["elastic_prefix_evicted"]``), never corruption. Allocation
+        runs ``for_live`` (capacity floors must not block the move) and
+        raises only when a slot's pages physically cannot fit its new
+        shard — callers size pools so one full sequence per slot always
+        fits (``spec_for`` guarantees it)."""
+        assert spec.page_size == self.spec.page_size \
+            and spec.max_pages == self.spec.max_pages, (spec, self.spec)
+        new = PagePool(spec, self.batch_slots, reclaim_quantum=self.quantum,
+                       max_register_pages=self.max_register_pages)
+        carried = {k: v for k, v in self.stats.items()}
+        carried["elastic_migrations"] = \
+            self.stats["elastic_migrations"] + 1
+        carried["elastic_prefix_evicted"] = \
+            self.stats["elastic_prefix_evicted"] + len(self.index)
+        new.stats.update(carried)
+        new.reclaimed = min(self.reclaimed, new.max_quanta)
+        new.capacity_cut = self.capacity_cut
+        perm = np.full(spec.n_pages, -1, np.int64)
+        for slot in range(self.batch_slots):
+            shard = new.slot_shard(slot)
+            for lp in range(self.spec.max_pages):
+                old_pid = int(self.blocks[slot, lp])
+                if old_pid == 0:
+                    continue
+                new_pid = new._alloc(shard, for_live=True)
+                if new_pid is None:
+                    raise RuntimeError(
+                        f"migrate: slot {slot}'s pages do not fit shard "
+                        f"{shard} of {spec} — pool sized too small for the "
+                        "live set")
+                new.blocks[slot, lp] = new_pid
+                new.slot_pages[slot].append(new_pid)
+                perm[new_pid] = old_pid
+        return new, perm
