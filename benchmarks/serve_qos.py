@@ -44,6 +44,7 @@ def _drive(eng, cfg, rng, shared_prefix: int = 0, prompt_len: int = PROMPT,
     ac = [r.admit_compute_s for r in reqs if r.t_admit]
     return {
         "tok_s": toks / max(wall, 1e-9),
+        "wall_s": wall,
         "p50_ms": 1e3 * float(np.percentile(lat, 50)),
         "p95_ms": 1e3 * float(np.percentile(lat, 95)),
         "p99_ms": 1e3 * float(np.percentile(lat, 99)),
@@ -71,7 +72,7 @@ def main(rows: Rows):
     out = {}
     for vi, v in enumerate(table.variants):
         eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN,
-                          params=params, table=table)
+                          params=params, table=table, sync_timing=True)
         eng.set_variant(vi)
         stats = _drive(eng, cfg, np.random.default_rng(0))
         out[v.name] = stats
@@ -83,7 +84,7 @@ def main(rows: Rows):
                       + out[table.variants[-1].name]["p95_ms"]) / 1e3
     for vi, v in enumerate(table.variants):
         eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN,
-                          params=params, table=table)
+                          params=params, table=table, sync_timing=True)
         eng.set_variant(vi)
         _drive(eng, cfg, np.random.default_rng(1))
         lat = np.asarray(eng.step_latencies, float)
@@ -93,7 +94,7 @@ def main(rows: Rows):
     runtime = PliantRuntime(table, monitor,
                             ControllerConfig(decision_interval_s=0.05))
     eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN, params=params,
-                      table=table, runtime=runtime)
+                      table=table, runtime=runtime, sync_timing=True)
     stats = _drive(eng, cfg, np.random.default_rng(2))
     stats["swaps"] = eng.swaps
     stats["final_variant"] = table.variants[eng.active_variant].name
@@ -115,7 +116,8 @@ def main(rows: Rows):
     runtime = PliantRuntime(ptable, monitor,
                             ControllerConfig(decision_interval_s=0.0))
     eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN, params=params,
-                      runtime=runtime, paged=True, page_size=4)
+                      runtime=runtime, paged=True, page_size=4,
+                      sync_timing=True)
     stats = _drive(eng, cfg, np.random.default_rng(3),
                    shared_prefix=PROMPT - 2)
     s = eng.pool.stats
@@ -131,27 +133,42 @@ def main(rows: Rows):
              f"tok_s={stats['tok_s']:.1f};"
              f"hit_rate={stats['prefix_hit_rate']:.2f};"
              f"reclaims={stats['reclaim_events']}")
-    # dense vs paged at EQUAL batch — the ROADMAP "close the paged gap"
-    # acceptance metric, on the paged engine's target workload: a shared
-    # system prompt (16-token prompts, 12 shared) with short completions.
-    # Both engines run the same trace twice: a warm-up pass (compiles;
-    # paged prefix registration — the steady state a long-running server
-    # sits in) and a measured pass with fresh counters. CI asserts paged
-    # tok/s >= dense and queue-wait p95 within 1.25x of dense.
+    # dense vs paged vs megastep at EQUAL batch — the ROADMAP "close the
+    # paged gap" acceptance metric, on the paged engine's target workload:
+    # a shared system prompt (16-token prompts, 12 shared) with short
+    # completions. Each engine runs the same trace twice: a warm-up pass
+    # (compiles; paged prefix registration — the steady state a
+    # long-running server sits in) and a measured pass with fresh
+    # counters. All three run sync_timing (drain before stamping) so the
+    # latency numbers measure compute, not async dispatch enqueue. CI
+    # asserts paged tok/s >= dense, megastep tok/s >= paged, queue-wait
+    # p95 within 1.25x, and megastep dispatches/token < 1.
     comparison = {}
     cmp_trace = dict(shared_prefix=12, prompt_len=16, max_new=6)
-    for name, paged in (("dense", False), ("paged", True)):
+    for name, ekw in (("dense", dict(paged=False)),
+                      ("paged", dict(paged=True)),
+                      ("megastep", dict(paged=True, megastep_k=4))):
         eng = ServeEngine(cfg, batch_slots=SLOTS, max_len=MAX_LEN,
-                          params=params, paged=paged, page_size=4)
+                          params=params, page_size=4, sync_timing=True,
+                          **ekw)
         _drive(eng, cfg, np.random.default_rng(5), **cmp_trace)
         eng.step_latencies.clear()
         eng.admit_latencies.clear()
         eng.step_admission_chunks.clear()
+        eng.decode_dispatches = eng.row_dispatches = eng.row_tokens = 0
+        eng.drain_block_s = 0.0
         st = _drive(eng, cfg, np.random.default_rng(5), **cmp_trace)
         st["mesh_shape"] = dict(eng.mesh.shape) if eng.mesh is not None \
             else None
         st["sharded_kernel"] = eng.sharded_kernel
-        if paged:
+        st["decode_dispatches"] = eng.decode_dispatches
+        st["dispatches_per_token"] = (eng.row_dispatches
+                                      / max(eng.row_tokens, 1))
+        # fraction of the wall the host spent NOT blocked on device
+        # transfers — the megastep pipeline's target metric
+        st["host_overhead_frac"] = max(
+            0.0, 1.0 - eng.drain_block_s / max(st["wall_s"], 1e-9))
+        if eng.paged:
             s = eng.pool.stats
             st["pool_occupancy_peak"] = s["peak_used"] / eng.pool.spec.usable
             st["grouped_pages"] = s["grouped_pages"]
@@ -167,6 +184,12 @@ def main(rows: Rows):
              f"paged={comparison['paged']['tok_s']:.1f};"
              f"qw_dense_ms={comparison['dense']['queue_wait_p95_ms']:.1f};"
              f"qw_paged_ms={comparison['paged']['queue_wait_p95_ms']:.1f}")
+    mega = comparison["megastep"]
+    rows.add("serve.megastep_vs_paged",
+             mega["tok_s"] / max(comparison["paged"]["tok_s"], 1e-9),
+             f"tok_s={mega['tok_s']:.1f};"
+             f"dispatches_per_token={mega['dispatches_per_token']:.2f};"
+             f"host_overhead_frac={mega['host_overhead_frac']:.2f}")
     # admission compute per mesh shape: single-device whole-chunk cell vs
     # the ring-sequence-parallel cell on 8 simulated devices (subprocess —
     # device count is fixed at jax import). CI tracks admit_compute_p95

@@ -83,6 +83,24 @@ class PliantController:
         return Action.HOLD
 
 
+def headroom_burst(runtime, qos_guard: float) -> bool:
+    """THE guard-band predicate: True when the attached runtime's monitor
+    has a tail estimate comfortably inside the QoS target — p99 at most
+    ``(1 - qos_guard) * target`` — i.e. there is measured headroom to spend
+    on throughput. Both serving burst knobs consult it: the admission chunk
+    budget (``ServeEngine._chunk_budget`` bursts prefill chunks) and the
+    megastep width (``ServeEngine._megastep_budget`` fuses K decode steps
+    per dispatch while admissions want interleaving). An abstaining monitor
+    (below ``min_samples``) or no runtime at all is NO evidence of headroom
+    — callers stay conservative."""
+    if runtime is None:
+        return False
+    mon = runtime.monitor
+    p99 = mon.p99()
+    return (p99 is not None and mon.qos_target_s > 0
+            and p99 <= (1.0 - qos_guard) * mon.qos_target_s)
+
+
 def __getattr__(name):
     # RoundRobinArbiter moved to core/arbiter.py (one interface with the
     # InterferenceAwareArbiter); lazy re-export keeps old imports working

@@ -69,6 +69,21 @@ class LatencyMonitor:
             self._buf.popleft()
         self._adapt()
 
+    def record_megastep(self, wall_s: float, tokens_per_row) -> None:
+        """Attribute one megastep's wall time to per-token samples: a fused
+        K-step dispatch surfaces ONE host stamp for up to K tokens per row,
+        so each row that emitted ``n > 0`` tokens contributes ``n`` samples
+        of ``wall_s / n`` — total mass per row equals the wall time the
+        client actually experienced, and the estimator keeps seeing
+        per-token latencies comparable with the per-step engine's."""
+        lat = []
+        for n in tokens_per_row:
+            n = int(n)
+            if n > 0:
+                lat.extend([wall_s / n] * n)
+        if lat:
+            self.record_many(lat)
+
     def p99(self) -> Optional[float]:
         if len(self._buf) < self.min_samples:
             return None

@@ -87,6 +87,21 @@ def main(argv=None):
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="first N prompt tokens identical across requests "
                         "(exercises the prefix cache under --paged)")
+    p.add_argument("--megastep", type=int, default=0,
+                   help="fuse up to K decode steps per dispatch (lax.scan "
+                        "megastep: on-device sampling + EOS/budget stop "
+                        "masking, async double-buffered host loop); paged "
+                        "only, 0 = one dispatch per token")
+    p.add_argument("--eos-id", type=int, default=-1,
+                   help="stop-token id; a request emitting it finishes "
+                        "early (-1 = generate max-new tokens)")
+    p.add_argument("--sync-timing", action="store_true",
+                   help="drain every megastep before dispatching the next: "
+                        "no pipeline overlap, but per-token stamps measure "
+                        "compute instead of dispatch enqueue (benchmarks)")
+    p.add_argument("--no-donate", action="store_true",
+                   help="keep cache buffers undonated (XLA double-buffers "
+                        "the pool; for debugging stale-reference holds)")
     p.add_argument("--max-admission-chunks", type=int, default=4,
                    help="prefill-chunk burst per step when no decoder is "
                         "inside its QoS guard band (continuous batching)")
@@ -136,9 +151,13 @@ def main(argv=None):
                       n_pages=args.pool_pages,
                       max_admission_chunks=args.max_admission_chunks,
                       qos_guard=args.qos_guard,
-                      admission_timeout_s=args.admission_timeout)
+                      admission_timeout_s=args.admission_timeout,
+                      megastep_k=args.megastep, eos_id=args.eos_id,
+                      sync_timing=args.sync_timing,
+                      donate=not args.no_donate)
     print(f"dispatch: {eng.explain_dispatch()}")
     print(f"dispatch: {eng.explain_prefill_dispatch()}")
+    print(f"dispatch: {eng.explain_megastep()}")
     injector = None
     if args.chaos:
         from repro.dist import elastic
@@ -226,6 +245,12 @@ def main(argv=None):
               f"replenish_evictions={s['replenish_evictions']} "
               f"chunks/step max={max(chunks, default=0)} "
               f"budget_cap={args.max_admission_chunks}")
+    if args.megastep:
+        d_t = eng.row_dispatches / max(eng.row_tokens, 1)
+        print(f"megastep: k={args.megastep} "
+              f"decode_dispatches={eng.decode_dispatches} "
+              f"dispatches/token={d_t:.2f} "
+              f"drain_block_s={eng.drain_block_s:.3f}")
     if args.qos_target > 0:
         acts = [h["action"] for h in runtime.history if h["action"] != "hold"]
         print(f"qos: target={1e3 * args.qos_target:.1f}ms "

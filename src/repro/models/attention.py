@@ -329,20 +329,26 @@ def _warn_gather(reason: str) -> None:
 
 def explain_dispatch(cfg: ModelConfig, mesh, *, batch_slots: int,
                      n_pages: int = 0,
-                     use_kernel: Optional[bool] = None) -> str:
+                     use_kernel: Optional[bool] = None,
+                     megastep_k: int = 0) -> str:
     """One-line description of the paged-decode path this configuration
-    dispatches to (surfaced by ``launch/serve.py`` at startup)."""
+    dispatches to (surfaced by ``launch/serve.py`` at startup).
+    ``megastep_k > 0`` notes that the decode cell runs inside a fused
+    K-step scan (one executable dispatch per K tokens) — the attention
+    dispatch decision itself is identical per scan iteration."""
     from repro.kernels import ops as kops
     if use_kernel is None:
         use_kernel = kops._on_tpu()
+    mega = (f", inside a fused {megastep_k}-token megastep scan"
+            if megastep_k > 0 else "")
     if mesh is None:
-        return ("paged decode: fused Pallas kernel, single device"
+        return (f"paged decode: fused Pallas kernel, single device{mega}"
                 if use_kernel else
                 "paged decode: dense gather reference, single device "
-                "(kernel off: not on TPU)")
+                f"(kernel off: not on TPU){mega}")
     if not use_kernel:
         return ("paged decode: GSPMD dense gather under mesh "
-                "(kernel off: not on TPU)")
+                f"(kernel off: not on TPU){mega}")
     from repro.dist.sharding import paged_decode_plan
     plan, reason = paged_decode_plan(cfg, mesh, batch_slots, n_pages)
     if plan is not None:
@@ -350,8 +356,9 @@ def explain_dispatch(cfg: ModelConfig, mesh, *, batch_slots: int,
                  if plan.kv_head_axis else "kv_heads replicated")
         return ("paged decode: fused kernel shard_map'd over "
                 f"{plan.batch_axes!r} ({plan.n_shards} slot-affinity "
-                f"shards, {heads})")
-    return f"paged decode: GSPMD dense gather FALLBACK under mesh — {reason}"
+                f"shards, {heads}){mega}")
+    return ("paged decode: GSPMD dense gather FALLBACK under mesh — "
+            f"{reason}{mega}")
 
 
 def _warn_prefill(reason: str) -> None:

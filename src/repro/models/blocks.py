@@ -157,6 +157,14 @@ def block_decode(kind: str, params, h, position, cache, cfg: ModelConfig,
 
     ``active`` (B,) bool masks per-slot cache writes (paged engines whose
     decode interleaves with background admission); None = all rows live.
+    This is also the megastep scan body's per-row FREEZE contract
+    (``lm.decode_megastep``): for a row with ``active=False``, every cache
+    leaf the row owns must come back bit-identical — the paged write paths
+    guarantee it by redirecting the row's scatter to the never-read null
+    page (dyn_scatter / sharded kernel) or masking it out of the one-hot
+    select, and ``mamba_decode`` by where-masking the state update. A
+    row that dies mid-megastep (EOS / budget) therefore stops mutating
+    its pages and SSM rows immediately, without a host round-trip.
     ``use_kernel`` forwards the paged-attention dispatch override;
     ``dyn_scatter`` selects the dynamic-index cache write for unsharded
     paged pools; under a ``mesh`` the paged path shard_maps the fused

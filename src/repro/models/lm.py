@@ -295,3 +295,81 @@ def decode_step(params, tokens, position, caches, cfg: ModelConfig,
                                  unroll=flags.unroll("groups"))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     return logits_fn(params, h[:, 0], cfg), new_caches
+
+
+def sample_token(logits, uids, draws, *, temperature: float = 0.0,
+                 seed: int = 0):
+    """On-device sampler under the ``(seed, uid, draw_index)`` contract.
+
+    logits: (B, V) fp32; uids/draws: (B,) int32. Greedy argmax when
+    ``temperature <= 0``; otherwise a gumbel-max categorical draw keyed by
+    ``fold_in(fold_in(PRNGKey(seed), uid), draw)`` — the key depends only on
+    the request identity and how many tokens it has emitted, NOT on batch
+    slot, megastep width, or dispatch grouping, so any decode schedule that
+    respects sequential draw indices produces the same stream.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    base = jax.random.PRNGKey(seed)
+
+    def one(row, uid, draw):
+        k = jax.random.fold_in(jax.random.fold_in(base, uid), draw)
+        return jax.random.categorical(k, row / temperature)
+
+    return jax.vmap(one)(logits, uids, draws).astype(jnp.int32)
+
+
+def decode_megastep(params, cur, pos, alive, uids, draws, budget, caches,
+                    cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                    k: int, temperature: float = 0.0, seed: int = 0,
+                    eos_id: int = -1, ep_axis: Optional[str] = None,
+                    mesh=None, use_kernel: Optional[bool] = None,
+                    dyn_scatter: bool = False, interpret: bool = False):
+    """K fused decode steps in one executable: a ``lax.scan`` whose body IS
+    ``decode_step`` plus on-device sampling and stop masking — the host
+    learns K tokens per row from a single transfer.
+
+    cur: (B,) int32 current tokens (the token whose KV gets written at
+    ``pos``); pos: (B,) int32 absolute positions; alive: (B,) bool live-row
+    mask (doubles as ``decode_step``'s cache-write ``active``); uids/draws:
+    (B,) int32 sampler-stream coordinates; budget: (B,) int32 tokens each
+    row may still emit (``max_new - len(out)`` on host).
+
+    Per scan iteration a live row writes KV at ``pos``, samples the next
+    token, and advances; a dead row is frozen — its carry is untouched and
+    its output slot carries the -1 sentinel (vocab ids are >= 0). Rows die
+    in-scan on EOS (when ``eos_id >= 0``) or on budget exhaustion, so an
+    EOS landing mid-megastep stops that row's cache writes immediately
+    without disturbing siblings. Max KV write position over the scan is
+    ``pos + k - 1`` on a fully-live row — the host pre-reserves that page
+    range (``PagePool.ensure_decode_range``) before dispatch.
+
+    Returns ``(toks (B, K) int32, cur, pos, alive, draws, budget,
+    new_caches)``.
+    """
+
+    def body(carry, _):
+        cur, pos, alive, draws, budget, caches = carry
+        logits, caches = decode_step(params, cur[:, None], pos, caches, cfg,
+                                     knobs, ep_axis=ep_axis, mesh=mesh,
+                                     active=alive, use_kernel=use_kernel,
+                                     dyn_scatter=dyn_scatter,
+                                     interpret=interpret)
+        tok = sample_token(logits, uids, draws, temperature=temperature,
+                           seed=seed)
+        emit = alive
+        out = jnp.where(emit, tok, jnp.int32(-1))
+        step1 = emit.astype(jnp.int32)
+        draws = draws + step1
+        budget = budget - step1
+        hit_eos = (out == jnp.int32(eos_id)) if eos_id >= 0 else \
+            jnp.zeros_like(alive)
+        alive = alive & ~hit_eos & (budget > 0)
+        pos = pos + step1
+        cur = jnp.where(emit, tok, cur)
+        return (cur, pos, alive, draws, budget, caches), out
+
+    carry0 = (cur, pos, alive, draws, budget, caches)
+    (cur, pos, alive, draws, budget, caches), toks = jax.lax.scan(
+        body, carry0, None, length=k)
+    return toks.T, cur, pos, alive, draws, budget, caches

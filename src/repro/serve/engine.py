@@ -184,6 +184,26 @@ class ServeEngine:
     backoff_cap: int = 8               # request; doubles per failure, capped
     background_compile: bool = True    # AOT-compile surviving-mesh decode
                                        # during a revocation's grace window
+    megastep_k: int = 0                # > 0: fuse up to K decode steps per
+                                       # dispatch (lax.scan megastep with
+                                       # on-device sampling/stop masking +
+                                       # async double-buffered host loop);
+                                       # paged engines only. 0 = per-step
+    eos_id: int = -1                   # stop-token id (-1 = none): a row
+                                       # emitting it finishes early, on
+                                       # device mid-megastep or on host in
+                                       # the per-step path — same contract
+    sync_timing: bool = False          # drain each megastep before
+                                       # dispatching the next: no pipeline
+                                       # overlap, but per-token stamps
+                                       # measure compute, not enqueue
+                                       # (benchmarks set this)
+    donate: bool = True                # donate cache buffers into decode /
+                                       # megastep / admission executables
+                                       # (in-place pool + SSM update — no
+                                       # per-step full-cache copy); rebuilt
+                                       # executables re-donate after an
+                                       # elastic re-home or variant swap
 
     def __post_init__(self):
         if self.runtime is not None:
@@ -241,6 +261,31 @@ class ServeEngine:
         # in-flight background admissions, keyed by slot (insertion order =
         # admission order): continuous batching keeps one per free slot
         self._admissions: Dict[int, _Admission] = {}
+        # admissions whose LAST chunk is dispatched but not yet drained:
+        # first-token sampling waits for the step's single drain point so
+        # the final chunk's compute overlaps the decode dispatched after it
+        self._await_admit: Dict[int, _Admission] = {}
+        # ---- megastep pipeline state (megastep_k > 0) ----
+        if self.megastep_k:
+            assert self.paged, "megastep decode requires the paged engine"
+        self._megasteps: Dict[Tuple[int, int], object] = {}  # (variant, k)
+        self._inflight: Optional[dict] = None  # dispatched, undrained round
+        self._carry = None             # device (cur, pos, alive, draws,
+                                       # budget) chained between dispatches;
+                                       # None = cold-start from host mirrors
+        self._inject_slots: Set[int] = set()   # slots (re)activated since
+                                               # the last dispatch: their
+                                               # carry rows merge from host
+        self._uids = np.zeros(self.batch_slots, np.int32)  # sampler stream
+        self._pos_ub = np.zeros(self.batch_slots, np.int32)  # exclusive ub
+                                       # on positions in-flight megasteps
+                                       # may write (page pre-map horizon)
+        self.decode_dispatches = 0     # decode/megastep executable calls
+        self.row_dispatches = 0        # per-row dispatch count: a row in a
+        self.row_tokens = 0            # drain with n>=1 tokens adds (1, n)
+                                       # — dispatches/token = 1.0 per-step,
+                                       # ~1/K under a sustained megastep
+        self.drain_block_s = 0.0       # wall spent blocked at drain points
         self._head_skips = 0           # consecutive pool-blocked head-of-queue
         # window-exit page freeing is sound only when EVERY attention layer
         # is banded (a single global/shared layer still reaches every page)
@@ -380,7 +425,21 @@ class ServeEngine:
             return "dense decode: ring caches (no paged dispatch)"
         return attn_mod.explain_dispatch(
             self.cfg, self.mesh, batch_slots=self.batch_slots,
-            n_pages=self._page_spec.n_pages, use_kernel=self.use_kernel)
+            n_pages=self._page_spec.n_pages, use_kernel=self.use_kernel,
+            megastep_k=self.megastep_k if self.paged else 0)
+
+    def explain_megastep(self) -> str:
+        """One-line megastep/pipeline description (startup banner)."""
+        if not self.paged or self.megastep_k <= 0:
+            return "megastep: off (one decode dispatch per token)"
+        samp = ("greedy argmax" if self.temperature <= 0.0 else
+                f"temperature categorical, (seed,uid,draw) fold-in "
+                f"seed={self.seed}")
+        return (f"megastep: up to {self.megastep_k} tokens fused per "
+                f"dispatch (lax.scan), on-device {samp} + EOS/budget stop "
+                f"masking, cache donation {'ON' if self.donate else 'OFF'}, "
+                + ("sync-timing drain (no overlap)" if self.sync_timing
+                   else "async double-buffered host pipeline"))
 
     @property
     def sharded_prefill(self) -> bool:
@@ -438,7 +497,10 @@ class ServeEngine:
         self._apply_pending_variant()
 
     def _apply_pending_variant(self) -> None:
-        if self._pending_variant is None or self._admissions:
+        # undrained admissions (_await_admit) count as in flight: their
+        # prefix tags / logits came from the old knobs
+        if (self._pending_variant is None or self._admissions
+                or self._await_admit):
             return
         idx, self._pending_variant = self._pending_variant, None
         if idx != self._active:
@@ -479,17 +541,24 @@ class ServeEngine:
             del self._prefills[key]
 
     def _lower_decode(self, step):
+        # donate the caches argument: the pool/SSM state updates in place
+        # instead of being copied whole per step (the dominant decode HBM
+        # cost at high occupancy). Donation is an executable property, so a
+        # rebuild (_rehome, variant swap) re-donates automatically; the
+        # collective-failure retry path copies first (_call_decode)
+        cidx = 4 if self.paged else 3
+        kw = dict(donate_argnums=(cidx,)) if self.donate else {}
         if self.mesh is None:
-            return jax.jit(step)
+            return jax.jit(step, **kw)
         if self.paged:      # (params, tokens, position, active, caches)
             return jax.jit(step,
                            in_shardings=(self._param_sh, None, None, None,
                                          self._cache_sh),
-                           out_shardings=(None, self._cache_sh))
+                           out_shardings=(None, self._cache_sh), **kw)
         return jax.jit(step,
                        in_shardings=(self._param_sh, None, None,
                                      self._cache_sh),
-                       out_shardings=(None, self._cache_sh))
+                       out_shardings=(None, self._cache_sh), **kw)
 
     def _prefill_exe(self, chunk_len: int):
         key = (self.active_knobs, chunk_len, self.paged)
@@ -497,27 +566,31 @@ class ServeEngine:
         if fn is not None:
             self._prefills.move_to_end(key)
             return fn
+        # the caches argument (position 3 in both admission signatures)
+        # donates like the decode path: a chunked prefill updates the pool /
+        # fresh single-request cache in place instead of copying it per chunk
+        kw = dict(donate_argnums=(3,)) if self.donate else {}
         if self.paged:
             step = step_mod.make_paged_admission_step(
                 self.cfg, self.active_knobs,
                 dynamic_scatter=self.mesh is None, mesh=self.mesh,
                 use_kernel=self.use_kernel, interpret=self.kernel_interpret)
             if self.mesh is None:
-                fn = jax.jit(step)
+                fn = jax.jit(step, **kw)
             else:
                 fn = jax.jit(step,
                              in_shardings=(self._param_sh, None, None,
                                            self._cache_sh, None),
-                             out_shardings=(None, self._cache_sh))
+                             out_shardings=(None, self._cache_sh), **kw)
         else:
             step = step_mod.make_admission_step(
                 self.cfg, self.active_knobs, mesh=self.mesh,
                 use_kernel=self.use_kernel, interpret=self.kernel_interpret)
             if self.mesh is None:
-                fn = jax.jit(step)
+                fn = jax.jit(step, **kw)
             else:
                 fn = jax.jit(step, in_shardings=(self._param_sh, None, None,
-                                                 None))
+                                                 None), **kw)
         self._prefills[key] = fn
         while len(self._prefills) > self.max_prefill_exes:
             self._prefills.popitem(last=False)
@@ -672,8 +745,15 @@ class ServeEngine:
            drop the admission-cell LRU — in-flight ``_Admission``s simply
            resume at their chunk cursor on the new mesh."""
         t0 = time.perf_counter()
+        # flush the async pipeline first: the in-flight megastep's tokens
+        # must land (and its donated-cache chain settle) before the caches
+        # are host-staged; the device carry is invalidated — the first
+        # dispatch on the new mesh cold-starts from the host mirrors
+        self._drain_pipeline()
         # in-flight admission logits live on the old mesh — host-stage them
-        for adm in self._admissions.values():
+        # (drain-deferred completions in _await_admit included)
+        for adm in list(self._admissions.values()) \
+                + list(self._await_admit.values()):
             if adm.logits is not None:
                 adm.logits = np.asarray(adm.logits)
         old_shards = self._plan_shards() if self.paged else 1
@@ -700,6 +780,8 @@ class ServeEngine:
             self.params = elastic.reshard_live(self.params, self._param_sh)
         self._build_decodes()
         self._prefills.clear()
+        self._megasteps.clear()    # lowered against the old mesh/shardings;
+                                   # rebuilt (and re-donated) lazily
         self.stats["rehomes"] += 1
         return dict(
             step_index=len(self.step_latencies), why=why,
@@ -794,9 +876,10 @@ class ServeEngine:
                     dtype=self.cache_dtype,
                     quantized=self._variant_knobs[variant].kv_quant))
                 B = self.batch_slots
+                kw = dict(donate_argnums=(4,)) if self.donate else {}
                 exe = jax.jit(
                     step, in_shardings=(psh, None, None, None, csh),
-                    out_shardings=(None, csh)
+                    out_shardings=(None, csh), **kw
                 ).lower(
                     sds(self.params),
                     jax.ShapeDtypeStruct((B, 1), jnp.int32),
@@ -970,7 +1053,8 @@ class ServeEngine:
         while self.pending:
             slot = next((i for i in range(self.batch_slots)
                          if self.slots[i] is None
-                         and i not in self._admissions), None)
+                         and i not in self._admissions
+                         and i not in self._await_admit), None)
             if slot is None:
                 break
             strict = self._head_skips >= self.max_head_skips
@@ -1054,12 +1138,34 @@ class ServeEngine:
         cap = max(1, self.max_admission_chunks)
         if not any(s is not None for s in self.slots):
             return cap
-        if self.runtime is not None:
-            mon = self.runtime.monitor
-            p99 = mon.p99()
-            if p99 is not None and mon.qos_target_s > 0 \
-                    and p99 <= (1.0 - self.qos_guard) * mon.qos_target_s:
-                return cap
+        from repro.core.controller import headroom_burst
+        if headroom_burst(self.runtime, self.qos_guard):
+            return cap
+        return 1
+
+    def _megastep_budget(self) -> int:
+        """Decode tokens the next megastep may fuse — K as a Pliant-visible
+        knob, bounded by the same guard band as ``_chunk_budget`` but
+        pulling the OTHER way: large K amortizes dispatch overhead
+        (throughput), small K keeps admission interleaving fine-grained and
+        lets a de-approximation decision (variant swap, reclaim) take
+        effect within one token instead of K. With admission work pending
+        the megastep shrinks to 1 unless the monitor shows measured
+        headroom (``controller.headroom_burst``); with nothing to
+        interleave, full K always. Queued work that CANNOT start — every
+        slot occupied, nothing in flight — is not admission work: shrinking
+        K for it would serialize the whole first wave at K=1 for nothing."""
+        cap = max(1, self.megastep_k)
+        admitting = bool(self._admissions or self._await_admit)
+        can_start = bool(self.pending) and any(
+            self.slots[i] is None and i not in self._admissions
+            and i not in self._await_admit
+            for i in range(self.batch_slots))
+        if not (admitting or can_start):
+            return cap
+        from repro.core.controller import headroom_burst
+        if headroom_burst(self.runtime, self.qos_guard):
+            return cap
         return 1
 
     def _advance_admissions(self) -> None:
@@ -1104,12 +1210,11 @@ class ServeEngine:
                 jnp.asarray(adm.next, jnp.int32), self.caches,
                 jnp.asarray(adm.slot, jnp.int32))
         adm.next += C
-        if adm.next >= S:
-            # sync only on the FINAL chunk (its logits are consumed below
-            # anyway): a per-chunk block would serialize the async dispatch
-            # pipeline the stall-free loop exists to keep full. compute_s
-            # absorbs earlier chunks' device time here — the total is right
-            jax.block_until_ready(adm.logits)
+        # NO per-chunk (or final-chunk) block here: every sync is deferred
+        # to the step's single drain point (_drain_admissions), so the final
+        # chunk's compute overlaps whatever the step dispatches after it.
+        # compute_s so far holds enqueue time only; the drain stamps the
+        # actual wait, keeping admit_compute_p95 honest under async dispatch
         adm.compute_s += time.perf_counter() - t0
         if adm.next in adm.mamba_register:
             self.pool.register_prefix(adm.slot, req.prompt,
@@ -1117,32 +1222,60 @@ class ServeEngine:
                                       mamba=self._mamba_snapshot(adm.slot))
         if adm.next < S:
             return
-        # admission complete: register remaining boundaries, emit the first
-        # token, and hand the slot to the decode batch
+        # admission complete: register remaining boundaries (host
+        # bookkeeping — needs no device sync) and park the admission at the
+        # drain point; first-token sampling and slot activation happen there
         for b in adm.tail_register:
             self.pool.register_prefix(adm.slot, req.prompt,
                                       self.active_knobs, b)
         # lookup caps sharing at len(prompt)-1 tokens, so at least one chunk
         # always ran and produced the sampling logits
         assert adm.logits is not None
-        tok = int(self._sample_rows(np.asarray(adm.logits), [req])[0])
-        now = time.perf_counter()
         del self._admissions[adm.slot]
-        self.admit_latencies.append(adm.compute_s)
-        self._token_lat.append(now - req.t_admit_start)  # TTFT sample (wall)
-        req.t_admit = now                  # admission COMPLETION
-        req.admit_compute_s = adm.compute_s
-        req.out.append(tok)
-        req.token_times.append(now)
-        if len(req.out) >= req.max_new:
-            req.done = True                # 1-token request: no slot
-            self._rngs.pop(req.uid, None)
-            if self._free_slot(adm.slot):
-                self._push_blocks()
+        self._await_admit[adm.slot] = adm
+
+    def _drain_admissions(self) -> None:
+        """The admission half of the step's single drain point: block on
+        each completed admission's final-chunk logits (the wait lands in
+        ``admit_compute_s`` — the dispatch loop stamped only enqueue time),
+        sample the first token, and hand the slot to the decode batch.
+        Newly activated slots join the NEXT dispatch: the per-step path
+        captures its row set before decoding, the megastep path merges them
+        into the device carry via ``_inject_slots``."""
+        if not self._await_admit:
             return
-        self.positions[adm.slot] = S
-        self.cur_tokens[adm.slot] = tok
-        self.slots[adm.slot] = req
+        freed = False
+        for slot, adm in list(self._await_admit.items()):
+            req = adm.req
+            t0 = time.perf_counter()
+            logits = np.asarray(adm.logits)          # <- the drain
+            dt = time.perf_counter() - t0
+            adm.compute_s += dt
+            self.drain_block_s += dt
+            del self._await_admit[slot]
+            tok = int(self._sample_rows(logits, [req])[0])
+            now = time.perf_counter()
+            self.admit_latencies.append(adm.compute_s)
+            self._token_lat.append(now - req.t_admit_start)  # TTFT (wall)
+            req.t_admit = now                  # admission COMPLETION
+            req.admit_compute_s = adm.compute_s
+            req.out.append(tok)
+            req.token_times.append(now)
+            if len(req.out) >= req.max_new \
+                    or (self.eos_id >= 0 and tok == self.eos_id):
+                req.done = True                # 1-token request: no slot
+                self._rngs.pop(req.uid, None)
+                freed |= self._free_slot(slot)
+                continue
+            self.positions[slot] = len(req.prompt)
+            self.cur_tokens[slot] = tok
+            self._uids[slot] = req.uid
+            self._pos_ub[slot] = len(req.prompt)
+            self.slots[slot] = req
+            if self.megastep_k:
+                self._inject_slots.add(slot)
+        if freed:
+            self._push_blocks()
 
     def _admit(self) -> None:
         """Dense path: legacy synchronous admission (full chunked prefill
@@ -1169,7 +1302,8 @@ class ServeEngine:
                 req.admit_compute_s = now - t0     # sync: compute == wall
                 req.out.append(tok)
                 req.token_times.append(now)
-                if len(req.out) >= req.max_new:
+                if len(req.out) >= req.max_new or (
+                        self.eos_id >= 0 and tok == self.eos_id):
                     req.done = True                # 1-token request: no slot
                     continue
                 self.positions[i] = len(req.prompt)
@@ -1178,24 +1312,251 @@ class ServeEngine:
 
     # --------------------------------------------------------------- steps --
 
+    def _call_decode(self, exe, args, cache_idx: int):
+        """Dispatch a decode/megastep executable with honest collective-
+        failure retry under donation: the call CONSUMES the caches argument
+        when donation is on, so a queued injected failure snapshots the
+        pre-step caches first and the retry re-issues from the snapshot —
+        the semantics stay "results discarded uncommitted, step re-run",
+        bounded by the injected count."""
+        while True:
+            retry = self._collective_failures > 0
+            if retry and self.donate:
+                safe = jax.tree.map(jnp.copy, args[cache_idx])
+            out = exe(*args)
+            if not retry:
+                return out
+            self._collective_failures -= 1
+            self.stats["collective_retries"] += 1
+            if self.donate:
+                args = args[:cache_idx] + (safe,) + args[cache_idx + 1:]
+
+    def _megastep_exe(self, k: int):
+        """The fused K-step executable for the ACTIVE variant, lowered
+        lazily per (variant, K) and cached — the QoS budget only ever picks
+        K from {1, megastep_k}, so at most two executables per variant.
+        Cleared (and re-donated on rebuild) by ``_rehome``."""
+        key = (self._active, k)
+        exe = self._megasteps.get(key)
+        if exe is not None:
+            return exe
+        step = step_mod.make_paged_megastep(
+            self.cfg, self.active_knobs, k=k, temperature=self.temperature,
+            seed=self.seed, eos_id=self.eos_id, mesh=self.mesh,
+            use_kernel=self.use_kernel, dynamic_scatter=self.mesh is None,
+            interpret=self.kernel_interpret)
+        kw = dict(donate_argnums=(7,)) if self.donate else {}
+        if self.mesh is None:
+            exe = jax.jit(step, **kw)
+        else:
+            from repro.dist import sharding as dist_sharding
+            in_sh, out_sh = dist_sharding.megastep_shardings(
+                self._param_sh, self._cache_sh)
+            exe = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          **kw)
+        self._megasteps[key] = exe
+        return exe
+
+    def _dispatch_megastep(self) -> Optional[dict]:
+        """Dispatch ONE fused K-step decode over the live slots without
+        waiting on it (async pipeline): pre-map every page the in-scan
+        cursor advance can touch, merge newly activated slots into the
+        device carry, and return the flight record the drain consumes.
+
+        The carry (cur/pos/alive/draws/budget) chains device-side between
+        dispatches — rows die IN-SCAN on EOS/budget, so the device alive
+        mask already agrees with the host's post-drain view and only slot
+        (re)activations need injecting (``_inject_slots``). Returns None
+        when no slot is decoding."""
+        rows = [i for i in range(self.batch_slots)
+                if self.slots[i] is not None]
+        if not rows:
+            # nothing alive: the device carry is stale by construction (the
+            # next activation cold-starts from the host mirrors) — drop it
+            # so idle engines hold no donated-cache chain
+            self._carry = None
+            return None
+        k = self._megastep_budget()
+        # never scan past the longest remaining budget: a row with one
+        # token left must not pay a K-step full-batch scan
+        k = max(1, min(k, max(self.slots[i].max_new - len(self.slots[i].out)
+                              for i in rows)))
+        dirty = False
+        for i in rows:
+            req = self.slots[i]
+            # exclusive bound on write positions this row can ever need:
+            # decode writes KV at S .. S+max_new-2 (the first of max_new
+            # tokens was sampled at admission). _pos_ub ratchets forward by
+            # k per dispatch — the host's mirror of the in-scan cursor,
+            # conservative while a prior megastep is still in flight
+            cap = len(req.prompt) + req.max_new - 1
+            ub = min(int(self._pos_ub[i]) + k, cap)
+            dirty |= self.pool.ensure_decode_range(
+                i, int(self.positions[i]), ub)
+            self._pos_ub[i] = ub
+        if dirty:
+            self._push_blocks()
+        t0 = time.perf_counter()
+        B = self.batch_slots
+        alive_host = np.array([s is not None for s in self.slots])
+        with self._ctx():
+            if self._carry is None:
+                # cold start (first dispatch / post-rehome): the host
+                # mirrors are authoritative
+                draws = jnp.asarray(np.array(
+                    [len(self.slots[i].out) if alive_host[i] else 0
+                     for i in range(B)], np.int32))
+                budget = jnp.asarray(np.array(
+                    [self.slots[i].max_new - len(self.slots[i].out)
+                     if alive_host[i] else 0 for i in range(B)], np.int32))
+                cur = jnp.asarray(self.cur_tokens)
+                pos = jnp.asarray(self.positions)
+                alive = jnp.asarray(alive_host)
+            else:
+                cur, pos, alive, draws, budget = self._carry
+                if self._inject_slots:
+                    m = np.zeros(B, bool)
+                    inj_draws = np.zeros(B, np.int32)
+                    inj_budget = np.zeros(B, np.int32)
+                    for i in self._inject_slots:
+                        req = self.slots[i]
+                        m[i] = True
+                        inj_draws[i] = len(req.out)
+                        inj_budget[i] = req.max_new - len(req.out)
+                    mj = jnp.asarray(m)
+                    cur = jnp.where(mj, jnp.asarray(self.cur_tokens), cur)
+                    pos = jnp.where(mj, jnp.asarray(self.positions), pos)
+                    alive = jnp.where(mj, True, alive)
+                    draws = jnp.where(mj, jnp.asarray(inj_draws), draws)
+                    budget = jnp.where(mj, jnp.asarray(inj_budget), budget)
+            args = (self.params, cur, pos, alive, jnp.asarray(self._uids),
+                    draws, budget, self.caches)
+            toks, cur, pos, alive, draws, budget, new_caches = \
+                self._call_decode(self._megastep_exe(k), args, 7)
+            self.caches = new_caches
+            self._carry = (cur, pos, alive, draws, budget)
+        self._inject_slots.clear()
+        self.decode_dispatches += 1
+        return dict(toks=toks, rows=[(i, self.slots[i]) for i in rows],
+                    k=k, t0=t0)
+
+    def _drain_megastep(self, flight: dict) -> None:
+        """THE decode drain point: one transfer surfaces up to K tokens and
+        the stop flags (the -1 sentinel; vocab ids are >= 0) per row.
+        Per-token times interpolate linearly across the megastep wall — the
+        same per-megastep -> per-token attribution the QoS monitor applies
+        (``LatencyMonitor.record_megastep``). Finished rows free their
+        slot/pages here; banded archs release window-dead pages."""
+        t0 = time.perf_counter()
+        toks = np.asarray(flight["toks"])
+        now = time.perf_counter()
+        self.drain_block_s += now - t0
+        wall = now - flight["t0"]
+        self.step_latencies.append(wall)
+        for entry in self._recovering:
+            # recovery = event application -> first COMPLETED megastep on
+            # the re-homed mesh (compile time of the cutover included)
+            entry["recovery_steps"] = \
+                len(self.step_latencies) - entry["step_index"]
+            entry["recovery_s"] = now - entry.pop("_t_rehome")
+        self._recovering.clear()
+        freed = False
+        emitted: List[int] = []
+        for i, req in flight["rows"]:
+            if req.done:
+                continue   # died in an earlier flight; this row is all -1
+            n = 0
+            for t in toks[i]:
+                if t < 0:
+                    break  # row died in-scan: EOS or budget exhausted
+                n += 1
+                req.out.append(int(t))
+                self.cur_tokens[i] = int(t)
+                self.positions[i] += 1
+            if n:
+                emitted.append(n)
+                self.row_dispatches += 1
+                self.row_tokens += n
+                for j in range(n):
+                    req.token_times.append(
+                        flight["t0"] + wall * (j + 1) / n)
+            if len(req.out) >= req.max_new or (
+                    self.eos_id >= 0 and req.out
+                    and req.out[-1] == self.eos_id):
+                req.done = True
+                self.slots[i] = None        # slot freed: continuous batch
+                self._rngs.pop(req.uid, None)
+                freed |= self._free_slot(i)
+            elif self._window_free:
+                # banded arch: pages that fell out of every layer's window
+                # are dead — return them so long decodes hold occupancy flat
+                freed |= self.pool.release_window_pages(
+                    i, int(self.positions[i]) - self._window_free)
+        if freed:
+            self._push_blocks()
+        if self.runtime is not None and emitted:
+            self.runtime.monitor.record_megastep(wall, emitted)
+
+    def _drain_pipeline(self) -> None:
+        """Flush the async double-buffer before state surgery (elastic
+        re-home): drain the in-flight megastep so its tokens land and its
+        donated-cache chain settles, and invalidate the device carry — the
+        next dispatch cold-starts from the host mirrors."""
+        if self._inflight is not None:
+            self._drain_megastep(self._inflight)
+            self._inflight = None
+        self._carry = None
+
+    def _megastep_round(self) -> None:
+        """One engine step in megastep mode — the async double-buffered
+        host pipeline: advance admissions, dispatch megastep N+1, THEN
+        drain megastep N (the device never idles waiting for the host to
+        process tokens), drain completed admissions, tick control. The ONE
+        explicit drain pair (``_drain_megastep`` + ``_drain_admissions``)
+        replaces the per-step path's scattered blocking calls.
+        ``sync_timing`` drains each dispatch in its own round instead — no
+        overlap, but per-token stamps measure compute, not enqueue."""
+        prev, self._inflight = self._inflight, None
+        self._advance_admissions()
+        flight = self._dispatch_megastep()
+        if prev is not None:
+            self._drain_megastep(prev)    # dispatch order == drain order
+        if flight is not None and self.sync_timing:
+            self._drain_megastep(flight)
+            flight = None
+        self._inflight = flight
+        self._drain_admissions()
+        self.pool.replenish()
+        self._control_tick()
+
     def step(self) -> None:
-        """One engine step. Paged: run the continuous-batching admission
-        phase (open admissions on every free slot, advance them under the
-        QoS chunk budget), then decode one token for every active slot
-        (admitting slots ride along inactive, their writes masked) — a long
-        prompt never stalls the decoders for more than the chunk budget.
-        Dense: legacy synchronous admission, then decode. Both tick the
-        Pliant control loop at the step boundary."""
+        """One engine step. Megastep (``megastep_k`` > 0): one async
+        double-buffered pipeline round (``_megastep_round``). Paged
+        per-step: run the continuous-batching admission phase (open
+        admissions on every free slot, advance them under the QoS chunk
+        budget), dispatch one decode for every active slot (admitting slots
+        ride along inactive, their writes masked), then drain admissions
+        and the decode at the step's single drain point — a long prompt
+        never stalls the decoders for more than the chunk budget. Dense:
+        legacy synchronous admission, then decode. All tick the Pliant
+        control loop at the step boundary."""
         self.step_count += 1
         self._process_capacity()   # deadline-reached capacity events cut
         self._expire_pending()     # over first, at the step boundary
+        if self.paged and self.megastep_k > 0:
+            self._megastep_round()
+            return
         if self.paged:
             self._advance_admissions()
         else:
             self._admit()
-        if all(s is None for s in self.slots):
+        # the decode row set is FIXED here: slots activated at this step's
+        # admission drain join the next step's decode
+        rows = [i for i, req in enumerate(self.slots) if req is not None]
+        if not rows:
             if self.paged:
-                self.pool.replenish()  # keep headroom between steps
+                self._drain_admissions()  # no decode to overlap — drain now
+                self.pool.replenish()     # keep headroom between steps
             self._control_tick()       # flush TTFT samples of 1-token admits
             return
         if self.paged:
@@ -1204,10 +1565,9 @@ class ServeEngine:
             # Grouped admission already reserved these pages, so this is a
             # no-op except for banded archs (which skip the reservation)
             dirty = False
-            for i, req in enumerate(self.slots):
-                if req is not None:
-                    dirty |= self.pool.ensure_decode_page(
-                        i, int(self.positions[i]))
+            for i in rows:
+                dirty |= self.pool.ensure_decode_page(
+                    i, int(self.positions[i]))
             if dirty:
                 self._push_blocks()
         t0 = time.perf_counter()
@@ -1218,21 +1578,25 @@ class ServeEngine:
                 act = jnp.asarray(
                     np.array([s is not None for s in self.slots]))
                 args = (self.params, toks, pos, act, self.caches)
+                cidx = 4
             else:
                 args = (self.params, toks, pos, self.caches)
-            out, new_caches = self._decodes[self._active](*args)
-            while self._collective_failures > 0:
-                # injected transient collective failure: the functional
-                # step's results are discarded UNCOMMITTED (self.caches
-                # still holds the pre-step state) and the step re-issued —
-                # honest retry semantics, bounded by the injected count
-                self._collective_failures -= 1
-                self.stats["collective_retries"] += 1
-                out, new_caches = self._decodes[self._active](*args)
+                cidx = 3
+            out, new_caches = self._call_decode(
+                self._decodes[self._active], args, cidx)
             self.caches = new_caches
+            self.decode_dispatches += 1
+            if self.paged:
+                # the step's single drain point: admission chunks were
+                # dispatched BEFORE the decode, so draining them here never
+                # waits on the decode — their compute overlapped its
+                # dispatch (satellite of the megastep pipeline)
+                self._drain_admissions()
             # fused greedy: ``out`` is (B,) sampled token ids — B*4 bytes
             # off-device per step instead of the (B, V) logits matrix
+            tb = time.perf_counter()
             out = np.asarray(out)
+            self.drain_block_s += time.perf_counter() - tb
         dt = time.perf_counter() - t0
         self.step_latencies.append(dt)
         for entry in self._recovering:
@@ -1243,7 +1607,6 @@ class ServeEngine:
             entry["recovery_s"] = time.perf_counter() - entry.pop("_t_rehome")
         self._recovering.clear()
         now = time.perf_counter()
-        rows = [i for i, req in enumerate(self.slots) if req is not None]
         if self._fused_sample:
             nxt_tokens = out[rows]
         else:
@@ -1257,7 +1620,10 @@ class ServeEngine:
             req.out.append(nxt)
             req.token_times.append(now)
             self.cur_tokens[i] = nxt
-            if len(req.out) >= req.max_new:
+            self.row_dispatches += 1
+            self.row_tokens += 1
+            if len(req.out) >= req.max_new or (
+                    self.eos_id >= 0 and nxt == self.eos_id):
                 req.done = True
                 self.slots[i] = None            # slot freed: continuous batch
                 self._rngs.pop(req.uid, None)
@@ -1292,7 +1658,7 @@ class ServeEngine:
             # apply any swap deferred by an in-flight admission
             self._apply_pending_variant()
         elif (self.runtime.active_variant != self._active
-                and not self._admissions):
+                and not self._admissions and not self._await_admit):
             # runtime owned by someone else (no tenant binding): follow its
             # decision state by polling, as before the tenant protocol
             self.set_variant(self.runtime.active_variant)
@@ -1303,6 +1669,7 @@ class ServeEngine:
         no active slots. Drivers must check this (not just pending/slots)
         before parking — a paged admission spans multiple steps."""
         return (not self.pending and not self._admissions
+                and not self._await_admit and self._inflight is None
                 and all(s is None for s in self.slots))
 
     def run(self, max_steps: int = 0) -> None:

@@ -497,6 +497,24 @@ class PagePool(CacheStore):
         self.slot_pages[slot].append(pid)
         return True
 
+    def ensure_decode_range(self, slot: int, start_pos: int,
+                            end_pos: int) -> bool:
+        """Host mirror of the megastep's in-scan cursor growth: map every
+        page touched by decode writes at positions ``[start_pos, end_pos)``
+        BEFORE the fused K-step executable is dispatched — the scan advances
+        the cursor on device, so no per-token host round-trip exists to
+        fault pages in lazily. Same live-growth semantics as
+        ``ensure_decode_page`` (bypasses the reclaim limit, raises on
+        exhaustion). Returns True when the block table changed (engine
+        re-pushes before dispatch)."""
+        if end_pos <= start_pos:
+            return False
+        P = self.spec.page_size
+        changed = False
+        for lp in range(start_pos // P, (end_pos - 1) // P + 1):
+            changed |= self.ensure_decode_page(slot, lp * P)
+        return changed
+
     def release_window_pages(self, slot: int, min_pos: int) -> bool:
         """Free the slot's leading pages that fell out of the attention
         window: every entry at position <= ``min_pos`` is masked by EVERY

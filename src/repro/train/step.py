@@ -193,6 +193,34 @@ def make_paged_serve_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
     return step
 
 
+def make_paged_megastep(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
+                        k: int, temperature: float = 0.0, seed: int = 0,
+                        eos_id: int = -1, ep_axis: Optional[str] = None,
+                        mesh=None, use_kernel: Optional[bool] = None,
+                        dynamic_scatter: bool = False,
+                        interpret: bool = False):
+    """Returns step(params, cur, pos, alive, uids, draws, budget, caches)
+    -> (toks (B,K), cur, pos, alive, draws, budget, caches) — K fused
+    decode steps with on-device sampling and stop masking in ONE
+    executable (``lm.decode_megastep``).
+
+    The caches argument sits at position 7 so the engine can jit with
+    ``donate_argnums=(7,)`` and update the paged pool + SSM state in
+    place. All the per-row carries (cur/pos/alive/draws/budget) round-trip
+    through the executable so the engine can chain megasteps device-side
+    without a host sync between them."""
+    from repro.models import lm as lm_mod
+    assert cfg.family != "encdec", "megastep: decoder-only path"
+
+    def step(params, cur, pos, alive, uids, draws, budget, caches):
+        return lm_mod.decode_megastep(
+            params, cur, pos, alive, uids, draws, budget, caches, cfg, knobs,
+            k=k, temperature=temperature, seed=seed, eos_id=eos_id,
+            ep_axis=ep_axis, mesh=mesh, use_kernel=use_kernel,
+            dyn_scatter=dynamic_scatter, interpret=interpret)
+    return step
+
+
 def make_admission_step(cfg: ModelConfig, knobs: ApproxKnobs = PRECISE, *,
                         mesh=None, use_kernel: Optional[bool] = None,
                         interpret: bool = False):
